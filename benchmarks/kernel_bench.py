@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks (framework layer, no paper table).
+
+Wall-clock on CPU for the jnp formulations (scan vs chunked vs blocked) —
+the *relative* numbers motivate the Pallas kernels; the kernels themselves
+are timed in interpret mode only for correctness, not speed (CPU container;
+TPU is the target).  Derived column = achieved GFLOP/s of the jnp path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blocked_attention, naive_attention
+from repro.models.rwkv import wkv_scan, wkv_chunked
+from repro.models.rglru import lru_scan, lru_scan_sequential
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(*, fast: bool = False) -> List[Dict]:
+    rows = []
+    B, S, H, D = (1, 512, 4, 32) if fast else (2, 1024, 8, 64)
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    attn_flops = 4.0 * B * H * S * S * D
+
+    f_naive = jax.jit(lambda q, k, v: naive_attention(q, k, v, causal=True))
+    f_block = jax.jit(lambda q, k, v: blocked_attention(q, k, v, causal=True,
+                                                        q_chunk=256,
+                                                        kv_chunk=256))
+    for name, fn in [("attn_naive", f_naive), ("attn_blocked_jnp", f_block)]:
+        us = _time(fn, q, k, v)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": f"{attn_flops / us / 1e3:.1f}GFLOP/s"})
+
+    T = 512 if fast else 2048
+    Hh, Dd = 4, 32
+    r = jax.random.normal(ks[3], (B, T, Hh, Dd)) * 0.5
+    kk = jax.random.normal(ks[4], (B, T, Hh, Dd)) * 0.5
+    vv = jax.random.normal(ks[5], (B, T, Hh, Dd)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[0], (B, T, Hh, Dd)) * 0.3 - 2.0)
+    u = jnp.zeros((Hh, Dd))
+    s0 = jnp.zeros((B, Hh, Dd, Dd))
+    wkv_flops = 4.0 * B * T * Hh * Dd * Dd
+    f_scan = jax.jit(lambda *a: wkv_scan(*a))
+    f_chunk = jax.jit(lambda *a: wkv_chunked(*a))
+    for name, fn in [("wkv6_scan", f_scan), ("wkv6_chunked", f_chunk)]:
+        us = _time(fn, r, kk, vv, lw, u, s0)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": f"{wkv_flops / us / 1e3:.1f}GFLOP/s"})
+
+    W = 256 if fast else 1024
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, T, W))) * 0.2 + 0.8
+    b = jax.random.normal(ks[2], (B, T, W)) * 0.1
+    f_assoc = jax.jit(lambda a, b: lru_scan(a, b, None))
+    f_seq = jax.jit(lambda a, b: lru_scan_sequential(a, b, None))
+    for name, fn in [("rglru_assoc", f_assoc), ("rglru_seq", f_seq)]:
+        us = _time(fn, a, b)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": f"{2.0 * B * T * W / us / 1e3:.1f}GFLOP/s"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")

@@ -1,0 +1,59 @@
+"""Paper §V-C / Fig. 12: dynamic dataset sizing vs straggler behavior.
+
+Runs Hermes and records the allocator trace for the weakest worker family
+(B1ms): dataset size sent over time and the worker's iteration times, which
+should stabilize toward the cluster median (Fig. 11b / 12).
+"""
+from __future__ import annotations
+
+import numpy as np
+from typing import Dict
+
+from repro.config import HermesConfig
+from repro.core.allocator import Allocation
+from repro.core.bundles import make_paper_bundle
+from repro.core.simulator import run_framework
+
+
+def run(*, fast: bool = False) -> Dict:
+    bundle, _ = make_paper_bundle("mnist", n=2500 if fast else 6000,
+                                  eval_batch=128)
+    r = run_framework(
+        "hermes", bundle, num_workers=6 if fast else 12,
+        hermes_cfg=HermesConfig(alpha=-1.3, beta=0.1, lam=5, eta=bundle.eta),
+        target_acc=0.99,  # run long enough for several allocator sweeps
+        max_iterations=400 if fast else 1500,
+        max_wall=60 if fast else 240,
+        init_alloc=Allocation(128, 16), alloc_every=2.0, seed=0)
+
+    times = {w: np.asarray(v) for w, v in r.worker_iter_times.items()}
+    med = float(np.median(np.concatenate(list(times.values()))))
+    weakest = [w for w in times if w.startswith("B1ms")]
+    out: Dict = {"median_iter_time": round(med, 3),
+                 "alloc_events": len(r.alloc_trace),
+                 "alloc_trace_head": r.alloc_trace[:10]}
+    for w in weakest:
+        t = times[w]
+        half = len(t) // 2
+        out[f"{w}_mean_early"] = round(float(t[:max(half, 1)].mean()), 3)
+        out[f"{w}_mean_late"] = round(float(t[half:].mean()), 3) if half else None
+        # stabilization: late-phase time should sit nearer the median
+        if half:
+            out[f"{w}_late_gap_to_median"] = round(
+                abs(float(t[half:].mean()) - med), 3)
+    # static-allocation control: BSP wait on the straggler
+    b = run_framework("bsp", bundle, num_workers=6 if fast else 12,
+                      target_acc=0.99, max_iterations=200 if fast else 600,
+                      max_wall=40 if fast else 120,
+                      init_alloc=Allocation(128, 16), seed=0)
+    bt = {w: np.asarray(v) for w, v in b.worker_iter_times.items()}
+    slowest = max(bt, key=lambda w: bt[w].mean())
+    fastest = min(bt, key=lambda w: bt[w].mean())
+    out["bsp_straggler_ratio"] = round(
+        float(bt[slowest].mean() / bt[fastest].mean()), 2)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,62 @@
+"""Paper Table III: Hermes vs BSP/ASP/SSP/EBSP (+SelSync) convergence.
+
+Reports, per (dataset, framework): total local iterations, simulated time to
+the accuracy target, WI_avg, convergence accuracy, API calls, and speedup
+vs BSP — the exact columns of the paper's Table III, on the synthetic
+MNIST/CIFAR stand-ins (see DESIGN.md §6 for the validation contract).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.config import HermesConfig
+from repro.core.allocator import Allocation
+from repro.core.bundles import make_paper_bundle
+from repro.core.simulator import run_framework, RunResult
+
+
+def run(dataset: str = "mnist", *, fast: bool = False,
+        frameworks: List[str] = None) -> List[Dict]:
+    frameworks = frameworks or ["bsp", "asp", "ssp", "ebsp", "selsync",
+                                "hermes"]
+    n = 2500 if fast else 6000
+    bundle, noniid = make_paper_bundle(dataset, n=n, eval_batch=128)
+    target = 0.88 if dataset == "mnist" else 0.62
+    if fast:
+        target -= 0.03
+    kw = dict(num_workers=6 if fast else 12, noniid=noniid,
+              target_acc=target, max_iterations=500 if fast else 4000,
+              max_wall=60 if fast else 420,
+              init_alloc=Allocation(128, 16), eval_every=3, seed=0)
+    hermes_cfg = HermesConfig(alpha=-1.3, beta=0.1,
+                              lam=5 if dataset == "mnist" else 15,
+                              eta=bundle.eta)
+
+    results: List[RunResult] = []
+    for fw in frameworks:
+        r = run_framework(fw, bundle, hermes_cfg=hermes_cfg, **kw)
+        results.append(r)
+
+    base = next((r for r in results if r.framework == "bsp"), results[0])
+    rows = []
+    for r in results:
+        rows.append({
+            "dataset": dataset,
+            "framework": r.framework,
+            "iterations": r.iterations,
+            "sim_time_s": round(r.sim_time, 2),
+            "wi_avg": round(r.wi_avg, 2),
+            "conv_acc": round(r.conv_acc, 4),
+            "reached": r.reached_target,
+            "api_calls": r.api_calls,
+            "mbytes": round(r.bytes_transferred / 1e6, 1),
+            "speedup_vs_bsp": round(base.sim_time / max(r.sim_time, 1e-9), 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    for ds in ("mnist", "cifar"):
+        for row in run(ds):
+            print(json.dumps(row))

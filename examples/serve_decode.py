@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + decode with a KV cache.
+
+Uses the reduced qwen3-family config (GQA + qk-norm) and the same
+prefill/decode step functions the 32k dry-run cells lower on the production
+mesh.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import json
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    for arch in ("qwen3-8b", "rwkv6-3b", "recurrentgemma-2b"):
+        cfg = get_smoke_config(arch)
+        out = serve(cfg, batch=4, prompt_len=32, gen=16)
+        print(f"{arch:20s} prefill={out['prefill_s']}s "
+              f"decode={out['decode_s']}s "
+              f"({out['decode_tok_per_s']} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer, save_tree, restore_tree
+
+__all__ = ["Checkpointer", "save_tree", "restore_tree"]

@@ -1,0 +1,30 @@
+"""The paper's downsized AlexNet (~990K parameters, SGDM eta=0.001 m=0.9).
+
+32x32x3 inputs: conv 3x3x32 -> pool -> conv 3x3x64 -> pool -> conv 3x3x128
+-> pool -> dense 256 -> dense 10, scaled to land near 990K params.
+"""
+from repro.config import ModelConfig, FAMILY_CNN
+
+CONFIG = ModelConfig(
+    name="cifar-alexnet",
+    family=FAMILY_CNN,
+    num_layers=5,
+    d_model=256,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=256,
+    vocab_size=10,
+    use_rope=False,
+    remat=False,
+    notes="paper model: downsized AlexNet ~990K params; image 32x32x3",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG
+
+
+IMAGE_SHAPE = (32, 32, 3)
+CHANNELS = (48, 96, 192)
+HIDDEN = 256
+NUM_CLASSES = 10

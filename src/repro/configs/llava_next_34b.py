@@ -1,0 +1,30 @@
+"""llava-next-34b — anyres tiling VLM. [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.  The vision frontend
+is a STUB: ``input_specs()`` provides pre-computed patch embeddings
+(anyres: base 576 tokens + up to 4 tiles -> 2880 image positions).
+"""
+from repro.config import ModelConfig, FAMILY_VLM
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family=FAMILY_VLM,
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    mlp_kind="swiglu",
+    frontend="vision",
+    frontend_tokens=2880,  # anyres: 5 tiles x 576 patch embeddings
+    notes="vision frontend stubbed (precomputed patch embeddings); long_500k skipped",
+)
+
+
+def smoke_config() -> ModelConfig:
+    from repro.config import replace
+    return replace(
+        CONFIG, name="llava-smoke", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, frontend_tokens=16,
+        remat=False)

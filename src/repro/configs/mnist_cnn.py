@@ -1,0 +1,31 @@
+"""The paper's MNIST CNN (~110K parameters, SGD eta=0.1, lambda=5, w=10).
+
+Architecture chosen to hit ~110K params on 28x28x1 inputs:
+conv 3x3x16 -> pool -> conv 3x3x32 -> pool -> dense 64 -> dense 10.
+"""
+from repro.config import ModelConfig, FAMILY_CNN
+
+CONFIG = ModelConfig(
+    name="mnist-cnn",
+    family=FAMILY_CNN,
+    num_layers=4,
+    d_model=64,  # dense hidden width
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=64,
+    vocab_size=10,  # classes
+    use_rope=False,
+    remat=False,
+    notes="paper model: ~110K params; image 28x28x1; channels (16, 32)",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG  # already CPU-sized
+
+
+# image geometry used by models/cnn.py
+IMAGE_SHAPE = (28, 28, 1)
+CHANNELS = (16, 32)
+HIDDEN = 64
+NUM_CLASSES = 10

@@ -1,0 +1,34 @@
+"""seamless-m4t-large-v2 — enc-dec, multimodal. [arXiv:2308.11596; hf]
+
+24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206.  Encoder-decoder
+backbone (24 enc + 24 dec); the audio frontend is a STUB providing
+pre-computed frame embeddings.
+"""
+from repro.config import ModelConfig, FAMILY_AUDIO
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family=FAMILY_AUDIO,
+    num_layers=24,  # decoder layers
+    num_encoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    mlp_kind="gelu",
+    norm_kind="layernorm",
+    use_rope=False,  # learned positions in the original; we use sinusoidal
+    frontend="audio",
+    frontend_tokens=0,  # frame embeddings provided at the input seq length
+    notes="enc-dec (NOT encoder-only: decode shapes run); audio frontend stubbed; long_500k skipped",
+)
+
+
+def smoke_config() -> ModelConfig:
+    from repro.config import replace
+    return replace(
+        CONFIG, name="seamless-smoke", num_layers=2, num_encoder_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+        remat=False)

@@ -1,0 +1,142 @@
+"""Dynamic dataset & mini-batch sizing via dual binary search (paper §IV-A).
+
+Model:  t_train = K * E * DSS / MBS            (Eq. 3)
+
+1. Observe per-worker iteration times; flag outliers with the IQR rule
+   ``t not in [Q1 - 1.5*IQR, Q3 + 1.5*IQR]`` (both stragglers and
+   under-utilized fast nodes).
+2. For each outlier, estimate its constant ``K = t * MBS / (E * DSS)`` from
+   the latest observation.
+3. Dual binary search: outer over the power-of-two MBS choices, inner over
+   DSS in [dss_min, dss_max], to land the predicted time at the cluster
+   median.  O(lg N * lg K) probes of the analytic model — no benchmarking
+   runs (the EBSP weakness the paper calls out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import HermesConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    dss: int
+    mbs: int
+
+    @property
+    def steps_per_iteration(self) -> int:
+        return max(1, self.dss // self.mbs)
+
+
+def quartiles(times: Sequence[float]) -> Tuple[float, float, float]:
+    q1, q2, q3 = np.percentile(np.asarray(times, np.float64), [25, 50, 75])
+    return float(q1), float(q2), float(q3)
+
+
+def detect_outliers(times: Dict[str, float], k: float = 1.5) -> List[str]:
+    """Workers whose time falls outside [Q1 - k*IQR, Q3 + k*IQR]."""
+    if len(times) < 4:
+        return []
+    vals = list(times.values())
+    q1, _, q3 = quartiles(vals)
+    iqr = q3 - q1
+    lo, hi = q1 - k * iqr, q3 + k * iqr
+    return [w for w, t in times.items() if t < lo or t > hi]
+
+
+def estimate_k(t_train: float, epochs: int, dss: int, mbs: int) -> float:
+    """Invert Eq. 3 for the per-worker constant K (time per mini-batch)."""
+    steps = max(1, (dss // mbs)) * max(1, epochs)
+    return t_train / steps
+
+
+def predicted_time(k: float, epochs: int, dss: int, mbs: int) -> float:
+    return k * max(1, epochs) * max(1, dss // mbs)
+
+
+def _search_dss(k: float, epochs: int, mbs: int, t_target: float,
+                dss_lo: int, dss_hi: int) -> int:
+    """Inner binary search: largest DSS with predicted time <= t_target."""
+    lo, hi = dss_lo, dss_hi
+    best = dss_lo
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        if predicted_time(k, epochs, mid, mbs) <= t_target:
+            best = mid
+            lo = mid + 1
+        else:
+            hi = mid - 1
+    return best
+
+
+def dual_binary_search(k: float, t_target: float, *, epochs: int = 1,
+                       dss_domain: Tuple[int, int] = (16, 60000),
+                       mbs_choices: Sequence[int] = (2, 4, 8, 16, 32, 64, 128, 256),
+                       mem_limit_dss: int = 10 ** 9) -> Allocation:
+    """Outer binary search over MBS, inner over DSS (paper Fig. 7).
+
+    Picks the (DSS, MBS) whose predicted time is closest to ``t_target``;
+    among near-ties prefers more data (larger DSS) so fast nodes contribute
+    more, matching the paper's observation in §V-C.
+    """
+    dss_lo, dss_hi = dss_domain
+    dss_hi = min(dss_hi, mem_limit_dss)
+    choices = sorted(mbs_choices)
+    best: Tuple[float, int, Allocation] = (float("inf"), 0, Allocation(dss_lo, choices[0]))
+
+    lo, hi = 0, len(choices) - 1
+    probed = set()
+
+    def probe(mi: int):
+        nonlocal best
+        if mi in probed:
+            return
+        probed.add(mi)
+        mbs = choices[mi]
+        dss = _search_dss(k, epochs, mbs, t_target, dss_lo, dss_hi)
+        dss = max(dss, mbs)  # at least one mini-batch
+        t = predicted_time(k, epochs, dss, mbs)
+        err = abs(t - t_target)
+        # prefer smaller error; tie-break on larger dss
+        if err < best[0] - 1e-9 or (abs(err - best[0]) <= 1e-9 and dss > best[2].dss):
+            best = (err, mi, Allocation(dss, mbs))
+
+    # outer binary search: predicted_time at the DSS optimum is monotone-ish
+    # in MBS (larger MBS -> fewer steps -> can afford more data); probe the
+    # midpoint and walk toward lower error.
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        probe(mid)
+        if mid + 1 <= len(choices) - 1:
+            probe(mid + 1)
+        t_mid = predicted_time(k, epochs, best[2].dss, choices[mid])
+        if t_mid > t_target and mid - 1 >= 0:
+            hi = mid - 1
+        else:
+            lo = mid + 1
+    return best[2]
+
+
+def reallocate(times: Dict[str, float], allocs: Dict[str, Allocation],
+               cfg: HermesConfig, *, epochs: int = 1,
+               dss_domain: Tuple[int, int] = (16, 60000),
+               mem_limit_dss: Dict[str, int] = None
+               ) -> Dict[str, Allocation]:
+    """One allocator round: IQR outliers get re-sized toward the median."""
+    out: Dict[str, Allocation] = {}
+    if not times:
+        return out
+    _, med, _ = quartiles(list(times.values()))
+    target = med if cfg.target == "median" else float(np.mean(list(times.values())))
+    for w in detect_outliers(times, cfg.iqr_k):
+        a = allocs[w]
+        k = estimate_k(times[w], epochs, a.dss, a.mbs)
+        lim = (mem_limit_dss or {}).get(w, 10 ** 9)
+        out[w] = dual_binary_search(
+            k, target, epochs=epochs, dss_domain=dss_domain,
+            mbs_choices=cfg.mbs_choices, mem_limit_dss=lim)
+    return out

@@ -1,0 +1,42 @@
+"""ModelBundle factories for the paper's two evaluation settings."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core.cluster import ModelBundle
+from repro.data.synthetic import make_image_dataset, train_test_split
+from repro.models.cnn import init_cnn, cnn_loss, cnn_accuracy
+
+
+def make_paper_bundle(dataset: str, *, n: int = 8192, seed: int = 0,
+                      eval_batch: int = 256) -> Tuple[ModelBundle, bool]:
+    """Returns (bundle, noniid).  dataset: "mnist" | "cifar"."""
+    if dataset == "mnist":
+        from repro.configs import mnist_cnn as C
+        data = make_image_dataset(n, C.IMAGE_SHAPE, C.NUM_CLASSES, seed=seed,
+                                  difficulty=0.35)
+        eta, momentum, noniid = 0.1, 0.0, False
+    elif dataset == "cifar":
+        from repro.configs import cifar_alexnet as C
+        # calibrated so the downsized AlexNet reaches ~0.9 ceiling slowly
+        # (paper's CIFAR-10 run converges to 51.7%); eta kept low — SGDM at
+        # the MNIST lr diverges on this data
+        data = make_image_dataset(n, C.IMAGE_SHAPE, C.NUM_CLASSES, seed=seed,
+                                  difficulty=0.9, label_noise=0.1)
+        eta, momentum, noniid = 0.02, 0.9, True
+    else:
+        raise KeyError(dataset)
+    train, test = train_test_split(data, 0.15, seed=seed)
+
+    def init(key):
+        params, _ = init_cnn(key, image_shape=C.IMAGE_SHAPE,
+                             channels=C.CHANNELS, hidden=C.HIDDEN,
+                             num_classes=C.NUM_CLASSES)
+        return params
+
+    bundle = ModelBundle(init=init, loss=cnn_loss, accuracy=cnn_accuracy,
+                         train_data=train, test_data=test, eta=eta,
+                         momentum=momentum, eval_batch=eval_batch)
+    return bundle, noniid

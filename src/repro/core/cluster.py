@@ -1,0 +1,221 @@
+"""Heterogeneous edge-cluster substrate for the Level-A reproduction.
+
+Real JAX training + a simulated clock: every worker performs *actual*
+mini-batch SGD on its own model replica (learning dynamics are real), while
+iteration durations follow the paper's cost model ``t = K * E * DSS / MBS``
+with per-family constants derived from Table II, multiplicative jitter, and
+optional degradation drift (the paper's "nodes slowing down over time").
+
+The communication model charges latency + bytes/bandwidth per message and
+meters API calls exactly like the paper's evaluation (dataset transfer,
+model pull, gradient push, telemetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import HermesConfig
+from repro.core.allocator import Allocation
+from repro.core.gup import GUPState, gup_init
+from repro.data.pipeline import ShardedLoader
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Cluster spec (paper Table II)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerSpec:
+    name: str
+    family: str
+    k_base: float          # simulated seconds per mini-batch step
+    mem_limit_dss: int     # max dataset size fitting worker memory
+    jitter: float = 0.06   # lognormal sigma on iteration time
+    drift_per_sec: float = 0.0  # multiplicative slowdown per simulated second
+
+
+# Relative speeds follow Table II vCPU counts / families; B1ms is the
+# straggler family, F4s_v2 the fastest.  One B1ms degrades over time.
+TABLE_II_FAMILIES = [
+    ("B1ms", 2, 0.055, 2000),
+    ("F2s_v2", 3, 0.028, 4000),
+    ("DS2_v2", 3, 0.025, 7000),
+    ("E2ds_v4", 2, 0.022, 16000),
+    ("F4s_v2", 2, 0.013, 8000),
+]
+
+
+def default_cluster(num_workers: int = 12, *, seed: int = 0,
+                    degrade_one: bool = True) -> List[WorkerSpec]:
+    specs: List[WorkerSpec] = []
+    i = 0
+    for fam, count, k, mem in TABLE_II_FAMILIES:
+        for j in range(count):
+            drift = 0.0
+            if degrade_one and fam == "B1ms" and j == 0:
+                drift = 2e-4  # slow hardware degradation
+            specs.append(WorkerSpec(name=f"{fam}_{j}", family=fam, k_base=k,
+                                    mem_limit_dss=mem, drift_per_sec=drift))
+            i += 1
+            if i >= num_workers:
+                return specs
+    # pad by cycling families if more workers requested
+    while len(specs) < num_workers:
+        fam, _, k, mem = TABLE_II_FAMILIES[len(specs) % len(TABLE_II_FAMILIES)]
+        specs.append(WorkerSpec(name=f"{fam}_x{len(specs)}", family=fam,
+                                k_base=k, mem_limit_dss=mem))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Communication model + metering
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommModel:
+    latency: float = 0.04          # seconds per message
+    bandwidth: float = 25e6        # bytes/second PS<->worker
+    compression: str = "none"      # none | fp16 | int8
+
+    def payload_factor(self) -> float:
+        return {"none": 1.0, "fp16": 0.5, "int8": 0.25}[self.compression]
+
+    def time(self, nbytes: float, compressed: bool = False) -> float:
+        f = self.payload_factor() if compressed else 1.0
+        return self.latency + (nbytes * f) / self.bandwidth
+
+
+class Meter:
+    """API-call / byte accounting (paper counts every PS contact)."""
+
+    def __init__(self):
+        self.api_calls: Dict[str, int] = {}
+        self.bytes: float = 0.0
+        self.calls_by_kind: Dict[str, int] = {}
+
+    def call(self, worker: str, kind: str, nbytes: float = 0.0, n: int = 1):
+        self.api_calls[worker] = self.api_calls.get(worker, 0) + n
+        self.calls_by_kind[kind] = self.calls_by_kind.get(kind, 0) + n
+        self.bytes += nbytes
+
+    @property
+    def total_calls(self) -> int:
+        return sum(self.api_calls.values())
+
+
+# ---------------------------------------------------------------------------
+# Model bundle: what the simulator trains
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModelBundle:
+    """Pure functions + data; everything the cluster needs to train."""
+
+    init: Callable[[jax.Array], Tree]            # key -> params
+    loss: Callable[[Tree, Dict], jnp.ndarray]    # (params, batch) -> scalar
+    accuracy: Callable[[Tree, Dict], jnp.ndarray]
+    train_data: Dict[str, np.ndarray]
+    test_data: Dict[str, np.ndarray]
+    eta: float = 0.1
+    momentum: float = 0.0
+    eval_batch: int = 512
+
+    def nbytes(self, params: Tree) -> float:
+        return float(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)))
+
+
+def _make_step(bundle: ModelBundle):
+    @jax.jit
+    def step(params, mom, batch):
+        g = jax.grad(bundle.loss)(params, batch)
+        if bundle.momentum > 0.0:
+            mom = jax.tree.map(lambda m, gg: bundle.momentum * m + gg, mom, g)
+            upd = mom
+        else:
+            upd = g
+        params = jax.tree.map(lambda p, u: p - bundle.eta * u, params, upd)
+        return params, mom
+
+    return step
+
+
+def _make_eval(bundle: ModelBundle):
+    loss_j = jax.jit(bundle.loss)
+    acc_j = jax.jit(bundle.accuracy)
+    return loss_j, acc_j
+
+
+# ---------------------------------------------------------------------------
+# Worker
+# ---------------------------------------------------------------------------
+
+class EdgeWorker:
+    """A single edge device: local model replica + data shard + GUP state."""
+
+    def __init__(self, spec: WorkerSpec, params: Tree, indices: np.ndarray,
+                 alloc: Allocation, bundle: ModelBundle,
+                 hermes_cfg: Optional[HermesConfig], seed: int):
+        self.spec = spec
+        self.params = params
+        self.mom = jax.tree.map(jnp.zeros_like, params)
+        self.alloc = alloc
+        self.bundle = bundle
+        self.loader = ShardedLoader(bundle.train_data, alloc.mbs, seed=seed,
+                                    indices=indices)
+        self.gup: Optional[GUPState] = gup_init(hermes_cfg) if hermes_cfg else None
+        self.rng = np.random.default_rng(seed + 17)
+        # counters
+        self.iterations = 0
+        self.model_pulls = 0
+        self.clock = 0.0           # worker-local simulated time
+        self.last_train_time = 0.0
+        self.prefetched = True     # data for the next iteration already local
+
+    # -- simulated timing ---------------------------------------------------
+    def k_now(self) -> float:
+        drift = 1.0 + self.spec.drift_per_sec * self.clock
+        return self.spec.k_base * drift
+
+    def sim_iteration_time(self, eval_n: int) -> float:
+        steps = self.alloc.steps_per_iteration
+        jit = float(np.exp(self.rng.normal(0.0, self.spec.jitter)))
+        train = self.k_now() * steps * jit
+        evalt = self.k_now() * 0.35 * max(1.0, eval_n / max(self.alloc.mbs, 1))
+        return train + evalt
+
+    # -- real compute ---------------------------------------------------------
+    def run_local_iteration(self, step_fn, eval_loss_fn, eval_batch) -> float:
+        """Perform DSS/MBS real SGD steps; return test loss (float)."""
+        for _ in range(self.alloc.steps_per_iteration):
+            batch = next(self.loader)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.mom = step_fn(self.params, self.mom, batch)
+        self.iterations += 1
+        return float(eval_loss_fn(self.params, eval_batch))
+
+    def set_allocation(self, alloc: Allocation, indices: np.ndarray):
+        self.alloc = alloc
+        self.loader.set_batch(alloc.mbs)
+        self.loader.set_indices(indices)
+
+    def refresh(self, params: Tree):
+        self.params = params
+        self.model_pulls += 1
+
+    def wi(self) -> float:
+        return self.iterations / max(1, self.model_pulls)
+
+
+def assign_shards(n_train: int, workers: List["EdgeWorker"],
+                  rng: np.random.Generator) -> None:
+    """(Re)assign each worker a random DSS-sized shard."""
+    for w in workers:
+        idx = rng.choice(n_train, size=min(w.alloc.dss, n_train), replace=False)
+        w.loader.set_indices(np.sort(idx))

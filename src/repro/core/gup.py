@@ -1,0 +1,123 @@
+"""HermesGUP (paper Algorithm 1): z-score gate on recent test losses.
+
+A worker keeps a queue of its last ``w`` test losses.  After each local
+iteration with test loss ``x``:
+
+    z = (x - mean(queue)) / std(queue)
+    push gradients  iff  z <= alpha          (alpha < 0)
+
+``alpha`` is dynamic: if ``n_iter`` iterations pass without a push
+(``n_iter >= lam``), alpha decays by ``beta`` toward 0 (more permissive) so
+small-but-crucial improvements near convergence still synchronize.  On a push
+``n_iter`` resets; alpha persists (the paper's §IV-B3 narrative: early
+strictness, later permissiveness).
+
+Both a host-side version (Level-A simulator) and a pure-jnp version
+(Level-B on-device gate inside the SPMD program) are provided; they are
+bit-equivalent up to float32 rounding and tested against each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import HermesConfig
+
+
+@dataclasses.dataclass
+class GUPState:
+    cfg: HermesConfig
+    queue: Deque[float]
+    alpha: float
+    n_iter: int = 0
+    pushes: int = 0
+    iterations: int = 0
+
+    def snapshot(self) -> dict:
+        return {"alpha": self.alpha, "n_iter": self.n_iter,
+                "pushes": self.pushes, "iterations": self.iterations,
+                "queue": list(self.queue)}
+
+
+def gup_init(cfg: HermesConfig) -> GUPState:
+    return GUPState(cfg=cfg, queue=deque(maxlen=cfg.window), alpha=cfg.alpha)
+
+
+def zscore(queue, x: float) -> float:
+    """z of x against the current queue; +inf when undefined (no variance)."""
+    if len(queue) < 2:
+        return float("inf")
+    mu = float(np.mean(queue))
+    sigma = float(np.std(queue))
+    if sigma <= 1e-12:
+        return float("inf")
+    return (x - mu) / sigma
+
+
+def gup_update(state: GUPState, test_loss: float) -> Tuple[bool, GUPState]:
+    """Algorithm 1, one iteration.  Returns (push?, state).  Mutates state."""
+    cfg = state.cfg
+    z = zscore(state.queue, test_loss)
+    state.queue.append(test_loss)
+    state.iterations += 1
+    push = z <= state.alpha
+    if push:
+        state.n_iter = 0
+        state.pushes += 1
+    else:
+        state.n_iter += 1
+        if state.n_iter >= cfg.lam:
+            # decay alpha by beta toward 0 (less strict), clamp to bounds
+            state.alpha = min(state.alpha + cfg.beta, cfg.alpha_max)
+            state.n_iter = 0
+    state.alpha = max(state.alpha, cfg.alpha_min)
+    return push, state
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp version (device-resident gate for the Level-B integration)
+# ---------------------------------------------------------------------------
+
+def gup_state_jax(cfg: HermesConfig):
+    """Initial device state: (queue, count, alpha, n_iter)."""
+    return {
+        "queue": jnp.zeros((cfg.window,), jnp.float32),
+        "count": jnp.int32(0),
+        "alpha": jnp.float32(cfg.alpha),
+        "n_iter": jnp.int32(0),
+    }
+
+
+def gup_gate_jax(state, test_loss, cfg: HermesConfig):
+    """jnp Algorithm 1 step.  Returns (push: bool scalar, new_state)."""
+    q, cnt = state["queue"], state["count"]
+    w = cfg.window
+    n_valid = jnp.minimum(cnt, w)
+    idx = jnp.arange(w)
+    valid = idx < n_valid
+    denom = jnp.maximum(n_valid, 1).astype(jnp.float32)
+    mu = jnp.sum(jnp.where(valid, q, 0.0)) / denom
+    var = jnp.sum(jnp.where(valid, jnp.square(q - mu), 0.0)) / denom
+    sigma = jnp.sqrt(var)
+    z = jnp.where((n_valid >= 2) & (sigma > 1e-12),
+                  (test_loss - mu) / jnp.maximum(sigma, 1e-12), jnp.inf)
+    push = z <= state["alpha"]
+
+    # ring-buffer append
+    slot = jnp.mod(cnt, w)
+    q = q.at[slot].set(test_loss.astype(jnp.float32))
+    cnt = cnt + 1
+
+    n_iter = jnp.where(push, 0, state["n_iter"] + 1)
+    decay = (~push) & (n_iter >= cfg.lam)
+    alpha = jnp.where(decay,
+                      jnp.minimum(state["alpha"] + cfg.beta, cfg.alpha_max),
+                      state["alpha"])
+    alpha = jnp.maximum(alpha, cfg.alpha_min)
+    n_iter = jnp.where(decay, 0, n_iter)
+    return push, {"queue": q, "count": cnt, "alpha": alpha, "n_iter": n_iter}

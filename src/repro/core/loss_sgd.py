@@ -1,0 +1,87 @@
+"""Loss-based SGD at the PS (paper Algorithm 2, Eq. 5-6).
+
+The PS keeps the freshly initialized parameters ``w0`` and a global
+gradient-sum ``sigma`` (the paper's ς).  A worker pushes its gradient-sum
+``G`` (sum of all its local-SGD gradients measured from ``w0``).  The PS:
+
+    w_temp   = w0 - eta * G          ; L_temp = testloss(w_temp)
+    W1, W2   = 1/L, 1/L_temp         ; L = testloss of current global model
+    merged   = (W1 * sigma + W2 * G) / (W1 + W2)
+    w_global = w0 - eta * merged     ; L <- testloss(w_global) ; sigma <- merged
+
+The merge itself (``loss_weighted_merge``) is a pure pytree function reused
+by the Level-B device integration and by the fused Pallas kernel
+(`kernels/loss_weighted_update.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import tree_axpy, tree_scale, tree_zeros_like
+
+Tree = Any
+
+
+def loss_weighted_merge(sigma: Tree, G: Tree, L: float, L_temp: float) -> Tree:
+    """(W1*sigma + W2*G)/(W1+W2) with W = 1/loss (Eq. 5-6)."""
+    w1 = 1.0 / jnp.maximum(L, 1e-12)
+    w2 = 1.0 / jnp.maximum(L_temp, 1e-12)
+    c1 = w1 / (w1 + w2)
+    c2 = w2 / (w1 + w2)
+    return jax.tree.map(lambda s, g: c1 * s + c2 * g, sigma, G)
+
+
+def apply_global(w0: Tree, eta: float, grad_sum: Tree) -> Tree:
+    """w = w0 - eta * grad_sum."""
+    return jax.tree.map(lambda w, g: w - eta * g, w0, grad_sum)
+
+
+@dataclasses.dataclass
+class PSState:
+    w0: Tree                      # frozen initial parameters
+    sigma: Tree                   # global gradient storage (ς)
+    eta: float
+    L: float = float("inf")       # test loss of the current global model
+    initialized: bool = False
+    updates: int = 0
+
+    def global_params(self) -> Tree:
+        return apply_global(self.w0, self.eta, self.sigma)
+
+
+def ps_init(w0: Tree, eta: float) -> PSState:
+    return PSState(w0=w0, sigma=tree_zeros_like(w0), eta=eta)
+
+
+def ps_push(ps: PSState, G: Tree,
+            eval_loss: Callable[[Tree], float]) -> Tuple[PSState, Tree, dict]:
+    """Algorithm 2.  Returns (new PS state, w_global, metrics).
+
+    ``eval_loss(params) -> float`` is the PS-side test-loss evaluation on the
+    held-out split; it is called once on the first push and twice after
+    (w_temp and w_global), exactly as in the paper.
+    """
+    evals = 0
+    if not ps.initialized:
+        sigma = G
+        w1 = apply_global(ps.w0, ps.eta, sigma)
+        L = float(eval_loss(w1))
+        evals += 1
+        new = PSState(w0=ps.w0, sigma=sigma, eta=ps.eta, L=L,
+                      initialized=True, updates=ps.updates + 1)
+        return new, w1, {"L": L, "L_temp": L, "evals": evals}
+
+    w_temp = apply_global(ps.w0, ps.eta, G)
+    L_temp = float(eval_loss(w_temp))
+    evals += 1
+    merged = loss_weighted_merge(ps.sigma, G, ps.L, L_temp)
+    w_global = apply_global(ps.w0, ps.eta, merged)
+    L = float(eval_loss(w_global))
+    evals += 1
+    new = PSState(w0=ps.w0, sigma=merged, eta=ps.eta, L=L, initialized=True,
+                  updates=ps.updates + 1)
+    return new, w_global, {"L": L, "L_temp": L_temp, "evals": evals}

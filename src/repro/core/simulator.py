@@ -1,0 +1,559 @@
+"""Discrete-event simulation of Hermes and the SOTA baselines (paper §V).
+
+Every framework trains *real* JAX model replicas; only time is simulated
+(per the paper's cost model).  Implemented frameworks:
+
+    bsp      — Bulk Synchronous Parallel (Eq. 1: barrier + gradient average)
+    asp      — Asynchronous Parallel (Eq. 2: immediate delta application)
+    ssp      — Stale Synchronous Parallel (staleness bound s)
+    ebsp     — Elastic BSP (ZipLine-lite dynamic barriers, lookahead R,
+               plus the benchmarking phase the paper criticizes)
+    selsync  — Selective Synchronization (relative-gradient-change trigger)
+    hermes   — the paper: GUP gate + loss-based SGD + dynamic allocation +
+               prefetching + compressed pushes
+
+Outputs a RunResult with everything Table III and Figs. 11-14 report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time as _time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import HermesConfig
+from repro.core.allocator import Allocation, reallocate
+from repro.core.cluster import (
+    CommModel, EdgeWorker, Meter, ModelBundle, WorkerSpec, default_cluster,
+    _make_step, _make_eval,
+)
+from repro.core.gup import gup_update
+from repro.core.loss_sgd import ps_init, ps_push
+from repro.data.synthetic import iid_partition, dirichlet_partition
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class RunResult:
+    framework: str
+    iterations: int                 # total local iterations across workers
+    ps_updates: int
+    sim_time: float                 # simulated seconds to convergence/stop
+    wall_time: float
+    conv_acc: float                 # best global accuracy observed
+    reached_target: bool
+    target_acc: float
+    api_calls: int
+    bytes_transferred: float
+    wi_avg: float
+    history: List[Tuple[float, float]]          # (sim_time, accuracy)
+    worker_iter_times: Dict[str, List[float]]   # per-worker iteration times
+    gup_trace: List[Tuple[float, str, float, bool]]  # (t, worker, loss, push)
+    alloc_trace: List[Tuple[float, str, int, int]]   # (t, worker, dss, mbs)
+    calls_by_kind: Dict[str, int]
+
+    def wi_table(self) -> Dict[str, float]:
+        return {}
+
+
+class _Env:
+    """Shared setup for every framework loop."""
+
+    def __init__(self, bundle: ModelBundle, *, num_workers: int,
+                 hermes_cfg: Optional[HermesConfig], seed: int,
+                 init_alloc: Allocation, noniid: bool,
+                 compression: str = "none"):
+        self.bundle = bundle
+        self.rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        self.params0 = bundle.init(key)
+        self.step_fn = _make_step(bundle)
+        self.loss_j, self.acc_j = _make_eval(bundle)
+        self.comm = CommModel(compression=compression)
+        self.meter = Meter()
+        self.specs = default_cluster(num_workers, seed=seed)
+        n_train = len(next(iter(bundle.train_data.values())))
+        if noniid:
+            parts = dirichlet_partition(bundle.train_data["labels"],
+                                        num_workers, seed=seed)
+        else:
+            parts = iid_partition(n_train, num_workers, seed=seed)
+        self.workers: List[EdgeWorker] = []
+        for i, spec in enumerate(self.specs):
+            shard = parts[i]
+            take = min(init_alloc.dss, len(shard))
+            idx = self.rng.choice(shard, size=take, replace=False)
+            w = EdgeWorker(spec, self.params0, np.sort(idx), init_alloc,
+                           bundle, hermes_cfg, seed + i)
+            self.workers.append(w)
+            # initial dataset transfer from the PS
+            self.meter.call(spec.name, "data",
+                            take * self._sample_bytes())
+        # evaluation batches
+        te = bundle.test_data
+        n_test = len(te["labels"])
+        eb = min(bundle.eval_batch, n_test)
+        sel = self.rng.choice(n_test, size=eb, replace=False)
+        self.eval_batch = {k: jnp.asarray(v[sel]) for k, v in te.items()}
+        self.test_full = {k: jnp.asarray(v) for k, v in te.items()}
+        self.params_bytes = bundle.nbytes(self.params0)
+        self.failures: Dict[str, float] = {}
+
+    def _sample_bytes(self) -> float:
+        one = {k: v[:1] for k, v in self.bundle.train_data.items()}
+        return float(sum(v.nbytes for v in one.values()))
+
+    def dead(self, worker: "EdgeWorker", at_time: float) -> bool:
+        t = self.failures.get(worker.spec.name)
+        return t is not None and at_time >= t
+
+    def worker_eval_loss(self, params) -> float:
+        return float(self.loss_j(params, self.eval_batch))
+
+    def global_accuracy(self, params) -> float:
+        return float(self.acc_j(params, self.test_full))
+
+
+def _mean_params(trees: List[Tree]) -> Tree:
+    n = float(len(trees))
+    return jax.tree.map(lambda *xs: sum(xs) / n, *trees)
+
+
+def _delta_apply(base: Tree, old: Tree, new_local: Tree) -> Tree:
+    """ASP: base + (new_local - old) — Hogwild-style delta application."""
+    return jax.tree.map(lambda b, o, n: b + (n - o), base, old, new_local)
+
+
+@dataclasses.dataclass
+class _StopCfg:
+    target_acc: float
+    max_iterations: int
+    max_sim_time: float
+    max_wall: float
+    eval_every: int      # global accuracy eval every N PS updates
+    patience: int
+
+
+def _check_stop(acc_best, reached, iters, sim_t, t0_wall, stop: _StopCfg,
+                stale_evals: int) -> bool:
+    if reached:
+        return True
+    if iters >= stop.max_iterations or sim_t >= stop.max_sim_time:
+        return True
+    if (_time.time() - t0_wall) >= stop.max_wall:
+        return True
+    if stale_evals >= stop.patience:
+        return True
+    return False
+
+
+def run_framework(framework: str, bundle: ModelBundle, *,
+                  num_workers: int = 12,
+                  hermes_cfg: Optional[HermesConfig] = None,
+                  seed: int = 0,
+                  init_alloc: Allocation = Allocation(256, 16),
+                  noniid: bool = False,
+                  target_acc: float = 0.95,
+                  max_iterations: int = 20000,
+                  max_sim_time: float = 1e6,
+                  max_wall: float = 600.0,
+                  eval_every: int = 5,
+                  patience: int = 40,
+                  ssp_s: int = 125,
+                  ebsp_r: int = 150,
+                  selsync_delta: float = 1.0,
+                  alloc_every: float = 30.0,
+                  failures: Optional[Dict[str, float]] = None) -> RunResult:
+    """``failures``: {worker_name: sim_time} — the node dies (stops
+    responding) at that simulated time.  Asynchronous frameworks tolerate
+    this natively (dead workers simply stop contributing); barrier
+    frameworks (BSP/EBSP) exclude a worker after it exceeds the failure
+    detection timeout (3x the expected iteration time)."""
+    hermes_cfg = hermes_cfg or HermesConfig()
+    compression = hermes_cfg.compression if framework == "hermes" else "none"
+    env = _Env(bundle, num_workers=num_workers,
+               hermes_cfg=hermes_cfg if framework == "hermes" else None,
+               seed=seed, init_alloc=init_alloc, noniid=noniid,
+               compression=compression)
+    stop = _StopCfg(target_acc, max_iterations, max_sim_time, max_wall,
+                    eval_every, patience)
+    env.failures = failures or {}
+    if framework == "bsp":
+        return _run_bsp(env, stop)
+    if framework == "asp":
+        return _run_async(env, stop, mode="asp")
+    if framework == "ssp":
+        return _run_async(env, stop, mode="ssp", ssp_s=ssp_s)
+    if framework == "ebsp":
+        return _run_ebsp(env, stop, lookahead=ebsp_r)
+    if framework == "selsync":
+        return _run_async(env, stop, mode="selsync", selsync_delta=selsync_delta)
+    if framework == "hermes":
+        return _run_hermes(env, stop, hermes_cfg, alloc_every=alloc_every)
+    raise KeyError(framework)
+
+
+# ---------------------------------------------------------------------------
+# BSP
+# ---------------------------------------------------------------------------
+
+def _run_bsp(env: _Env, stop: _StopCfg) -> RunResult:
+    t0 = _time.time()
+    w_global = env.params0
+    sim_t = 0.0
+    acc_best, reached, stale = 0.0, False, 0
+    history: List[Tuple[float, float]] = []
+    itimes: Dict[str, List[float]] = {w.spec.name: [] for w in env.workers}
+    superstep = 0
+    eval_n = env.eval_batch["labels"].shape[0]
+
+    excluded: set = set()
+    while True:
+        superstep += 1
+        durations = []
+        alive = [w for w in env.workers if w.spec.name not in excluded]
+        if not alive:
+            break
+        for w in alive:
+            w.params = w_global
+            w.mom = jax.tree.map(jnp.zeros_like, w.mom)
+            d = w.sim_iteration_time(eval_n)
+            durations.append(d)
+            itimes[w.spec.name].append(d)
+            w.run_local_iteration(env.step_fn, env.loss_j,
+                                  {k: v for k, v in env.eval_batch.items()})
+            w.clock = sim_t + d
+        # failure detection: a node that died mid-iteration stalls the
+        # barrier for the detection timeout (3x expected), then is excluded
+        typical = float(np.median(durations))
+        newly_dead = [w for w in alive if env.dead(w, sim_t + typical)]
+        if newly_dead:
+            sim_t += 3.0 * typical  # detection timeout paid by EVERYONE
+            for w in newly_dead:
+                excluded.add(w.spec.name)
+            alive = [w for w in alive if w.spec.name not in excluded]
+            if not alive:
+                break
+        barrier = sim_t + max(durations)          # wait for the straggler
+        # push gradients + pull model (everyone, every superstep)
+        push_t = env.comm.time(env.params_bytes)
+        pull_t = env.comm.time(env.params_bytes)
+        for w in alive:
+            env.meter.call(w.spec.name, "push", env.params_bytes)
+            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            w.model_pulls += 1
+        w_global = _mean_params([w.params for w in alive])
+        sim_t = barrier + push_t + pull_t
+        iters = sum(w.iterations for w in env.workers)
+        if superstep % stop.eval_every == 0 or superstep == 1:
+            acc = env.global_accuracy(w_global)
+            history.append((sim_t, acc))
+            stale = stale + 1 if acc <= acc_best + 1e-4 else 0
+            acc_best = max(acc_best, acc)
+            reached = reached or acc >= stop.target_acc
+        if _check_stop(acc_best, reached, iters, sim_t, t0, stop, stale):
+            break
+
+    return _result("bsp", env, sim_t, t0, acc_best, reached, stop, history,
+                   itimes, [], [], ps_updates=superstep)
+
+
+# ---------------------------------------------------------------------------
+# ASP / SSP / SelSync (event-driven, per-worker loop)
+# ---------------------------------------------------------------------------
+
+def _run_async(env: _Env, stop: _StopCfg, *, mode: str, ssp_s: int = 125,
+               selsync_delta: float = 1.0) -> RunResult:
+    t0 = _time.time()
+    w_global = env.params0
+    acc_best, reached, stale = 0.0, False, 0
+    history: List[Tuple[float, float]] = []
+    itimes: Dict[str, List[float]] = {w.spec.name: [] for w in env.workers}
+    eval_n = env.eval_batch["labels"].shape[0]
+    heap: List[Tuple[float, int, int]] = []
+    pulled: Dict[int, Tree] = {}
+    prev_delta_norm: Dict[int, float] = {}
+    prev_delta: Dict[int, Tree] = {}
+    ps_updates = 0
+    sim_t = 0.0
+
+    for i, w in enumerate(env.workers):
+        w.params = w_global
+        pulled[i] = w_global
+        d = w.sim_iteration_time(eval_n)
+        itimes[w.spec.name].append(d)
+        heapq.heappush(heap, (d, i, 0))
+
+    while heap:
+        sim_t, i, _ = heapq.heappop(heap)
+        w = env.workers[i]
+        if env.dead(w, sim_t):
+            continue  # node failure: it simply never reports back
+        w.clock = sim_t
+        # SSP staleness gate: block until within s of the slowest worker
+        if mode == "ssp":
+            min_iter = min(x.iterations for x in env.workers
+                           if not env.dead(x, sim_t))
+            if w.iterations > min_iter + ssp_s:
+                heapq.heappush(heap, (sim_t + 0.05, i, 1))
+                continue
+        w.run_local_iteration(env.step_fn, env.loss_j, env.eval_batch)
+
+        do_sync = True
+        if mode == "selsync":
+            # SelSync's relative gradient change: ||d_t - d_{t-1}|| / ||d_{t-1}||
+            delta = jax.tree.map(lambda n, o: n - o, w.params, pulled[i])
+            prev = prev_delta.get(i)
+            if prev is None:
+                rel = float("inf")  # first iteration: sync
+            else:
+                diff = jax.tree.map(lambda a, b: a - b, delta, prev)
+                dn = float(jnp.sqrt(sum(jnp.vdot(x, x).real
+                                        for x in jax.tree.leaves(diff))))
+                pn = float(jnp.sqrt(sum(jnp.vdot(x, x).real
+                                        for x in jax.tree.leaves(prev))))
+                rel = dn / max(pn, 1e-9)
+            prev_delta[i] = delta
+            do_sync = rel > selsync_delta
+
+        if do_sync:
+            env.meter.call(w.spec.name, "push", env.params_bytes)
+            w_global = _delta_apply(w_global, pulled[i], w.params)
+            ps_updates += 1
+            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            w.refresh(w_global)
+            pulled[i] = w_global
+            comm = env.comm.time(env.params_bytes) * 2
+        else:
+            env.meter.call(w.spec.name, "telemetry", 128)
+            comm = 0.0
+
+        d = w.sim_iteration_time(eval_n)
+        itimes[w.spec.name].append(d)
+        heapq.heappush(heap, (sim_t + comm + d, i, 0))
+
+        iters = sum(x.iterations for x in env.workers)
+        if ps_updates and ps_updates % (stop.eval_every * len(env.workers)) == 0:
+            acc = env.global_accuracy(w_global)
+            history.append((sim_t, acc))
+            stale = stale + 1 if acc <= acc_best + 1e-4 else 0
+            acc_best = max(acc_best, acc)
+            reached = reached or acc >= stop.target_acc
+        if _check_stop(acc_best, reached, iters, sim_t, t0, stop, stale):
+            break
+
+    if not history:
+        acc_best = env.global_accuracy(w_global)
+        history.append((sim_t, acc_best))
+    return _result(mode, env, sim_t, t0, acc_best, reached, stop, history,
+                   itimes, [], [], ps_updates=ps_updates)
+
+
+# ---------------------------------------------------------------------------
+# EBSP (ZipLine-lite)
+# ---------------------------------------------------------------------------
+
+def _run_ebsp(env: _Env, stop: _StopCfg, *, lookahead: int) -> RunResult:
+    t0 = _time.time()
+    w_global = env.params0
+    sim_t = 0.0
+    acc_best, reached, stale = 0.0, False, 0
+    history: List[Tuple[float, float]] = []
+    itimes: Dict[str, List[float]] = {w.spec.name: [] for w in env.workers}
+    eval_n = env.eval_batch["labels"].shape[0]
+    ewma = {i: None for i in range(len(env.workers))}
+    ps_updates = 0
+
+    # benchmarking phase (the overhead the paper criticizes)
+    for i, w in enumerate(env.workers):
+        bt = 0.0
+        for _ in range(3):
+            bt += w.sim_iteration_time(eval_n)
+        ewma[i] = bt / 3
+        env.meter.call(w.spec.name, "benchmark", 1024, n=3)
+    sim_t += max(ewma.values())
+
+    while True:
+        # choose barrier: candidate times are k-th completions of each worker
+        # within `lookahead` iterations of the fastest; minimize total idle.
+        preds = {i: ewma[i] for i in ewma}
+        fastest = min(preds.values())
+        best_T, best_idle = None, float("inf")
+        for i in preds:
+            for k in range(1, max(2, int(lookahead * fastest / preds[i]) + 1)):
+                T = sim_t + preds[i] * k
+                if T - sim_t > lookahead * fastest:
+                    continue
+                idle = 0.0
+                for j in preds:
+                    m = max(1, int((T - sim_t) // preds[j]))
+                    idle += (T - sim_t) - m * preds[j]
+                if idle < best_idle:
+                    best_idle, best_T = idle, T
+        T = best_T or (sim_t + max(preds.values()))
+
+        # each worker runs as many local iterations as fit before T
+        for i, w in enumerate(env.workers):
+            w.params = w_global
+            m = max(1, int((T - sim_t) // preds[i]))
+            for _ in range(m):
+                d = w.sim_iteration_time(eval_n)
+                itimes[w.spec.name].append(d)
+                ewma[i] = 0.7 * ewma[i] + 0.3 * d
+                w.run_local_iteration(env.step_fn, env.loss_j, env.eval_batch)
+            env.meter.call(w.spec.name, "push", env.params_bytes)
+            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            w.model_pulls += 1
+        w_global = _mean_params([w.params for w in env.workers])
+        ps_updates += 1
+        sim_t = T + env.comm.time(env.params_bytes) * 2
+
+        iters = sum(x.iterations for x in env.workers)
+        if ps_updates % stop.eval_every == 0 or ps_updates == 1:
+            acc = env.global_accuracy(w_global)
+            history.append((sim_t, acc))
+            stale = stale + 1 if acc <= acc_best + 1e-4 else 0
+            acc_best = max(acc_best, acc)
+            reached = reached or acc >= stop.target_acc
+        if _check_stop(acc_best, reached, iters, sim_t, t0, stop, stale):
+            break
+
+    return _result("ebsp", env, sim_t, t0, acc_best, reached, stop, history,
+                   itimes, [], [], ps_updates=ps_updates)
+
+
+# ---------------------------------------------------------------------------
+# Hermes
+# ---------------------------------------------------------------------------
+
+def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
+                alloc_every: float) -> RunResult:
+    t0 = _time.time()
+    ps = ps_init(env.params0, hcfg.eta)
+    eta = env.bundle.eta
+    acc_best, reached, stale = 0.0, False, 0
+    history: List[Tuple[float, float]] = []
+    itimes: Dict[str, List[float]] = {w.spec.name: [] for w in env.workers}
+    gup_trace: List[Tuple[float, str, float, bool]] = []
+    alloc_trace: List[Tuple[float, str, int, int]] = []
+    eval_n = env.eval_batch["labels"].shape[0]
+    heap: List[Tuple[float, int, int]] = []
+    sim_t = 0.0
+    ps_busy_until = 0.0
+    last_alloc_check = 0.0
+    latest_times: Dict[str, float] = {}
+    prefetch_ready: Dict[int, float] = {}
+    n_train = len(next(iter(env.bundle.train_data.values())))
+    rng = env.rng
+    w_global = env.params0
+
+    for i, w in enumerate(env.workers):
+        d = w.sim_iteration_time(eval_n)
+        itimes[w.spec.name].append(d)
+        heapq.heappush(heap, (d, i, 0))
+
+    def ps_eval(params) -> float:
+        return env.worker_eval_loss(params)
+
+    while heap:
+        sim_t, i, _ = heapq.heappop(heap)
+        w = env.workers[i]
+        if env.dead(w, sim_t):
+            continue  # failed node: its pushes simply stop arriving
+        w.clock = sim_t
+        loss = w.run_local_iteration(env.step_fn, env.loss_j, env.eval_batch)
+        latest_times[w.spec.name] = itimes[w.spec.name][-1]
+        env.meter.call(w.spec.name, "telemetry", 64)
+        push, _ = gup_update(w.gup, loss)
+        gup_trace.append((sim_t, w.spec.name, loss, push))
+
+        next_start = sim_t
+        if push:
+            # G measured from w0 (Algorithm 2's Worker-SGD accumulation)
+            G = jax.tree.map(lambda w0_, wl: (w0_ - wl) / eta, ps.w0, w.params)
+            env.meter.call(w.spec.name, "push", env.params_bytes, n=1)
+            arrive = sim_t + env.comm.time(env.params_bytes, compressed=True)
+            start = max(arrive, ps_busy_until)
+            ps, w_global, _m = ps_push(ps, G, ps_eval)
+            ps_time = 0.004 * _m["evals"] * max(1.0, eval_n / 64)
+            ps_busy_until = start + ps_time
+            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            back = ps_busy_until + env.comm.time(env.params_bytes, compressed=True)
+            w.refresh(w_global)
+            w.mom = jax.tree.map(jnp.zeros_like, w.mom)
+            next_start = back
+
+        # allocator sweep (asynchronous monitoring)
+        if sim_t - last_alloc_check >= alloc_every and len(latest_times) >= 4:
+            last_alloc_check = sim_t
+            allocs = {x.spec.name: x.alloc for x in env.workers}
+            mem = {x.spec.name: x.spec.mem_limit_dss for x in env.workers}
+            new = reallocate(latest_times, allocs, hcfg,
+                             dss_domain=(32, max(64, n_train // len(env.workers))),
+                             mem_limit_dss=mem)
+            for j, x in enumerate(env.workers):
+                if x.spec.name in new:
+                    a = new[x.spec.name]
+                    idx = rng.choice(n_train, size=min(a.dss, n_train),
+                                     replace=False)
+                    x.set_allocation(a, np.sort(idx))
+                    alloc_trace.append((sim_t, x.spec.name, a.dss, a.mbs))
+                    env.meter.call(x.spec.name, "data",
+                                   a.dss * env._sample_bytes())
+                    # prefetch: transfer overlaps with compute
+                    prefetch_ready[j] = sim_t + env.comm.time(
+                        a.dss * env._sample_bytes())
+
+        # next iteration (wait for prefetch only if it hasn't landed)
+        if i in prefetch_ready:
+            next_start = max(next_start, prefetch_ready.pop(i))
+        d = w.sim_iteration_time(eval_n)
+        itimes[w.spec.name].append(d)
+        heapq.heappush(heap, (next_start + d, i, 0))
+
+        iters = sum(x.iterations for x in env.workers)
+        if ps.updates and ps.updates % stop.eval_every == 0:
+            acc = env.global_accuracy(w_global)
+            history.append((sim_t, acc))
+            stale = stale + 1 if acc <= acc_best + 1e-4 else 0
+            acc_best = max(acc_best, acc)
+            reached = reached or acc >= stop.target_acc
+        if _check_stop(acc_best, reached, iters, sim_t, t0, stop, stale):
+            break
+
+    if not history:
+        acc_best = env.global_accuracy(w_global)
+        history.append((sim_t, acc_best))
+    return _result("hermes", env, sim_t, t0, acc_best, reached, stop, history,
+                   itimes, gup_trace, alloc_trace, ps_updates=ps.updates)
+
+
+# ---------------------------------------------------------------------------
+
+def _result(name: str, env: _Env, sim_t: float, t0: float, acc_best: float,
+            reached: bool, stop: _StopCfg, history, itimes, gup_trace,
+            alloc_trace, *, ps_updates: int) -> RunResult:
+    wi = float(np.mean([w.wi() for w in env.workers]))
+    return RunResult(
+        framework=name,
+        iterations=sum(w.iterations for w in env.workers),
+        ps_updates=ps_updates,
+        sim_time=sim_t,
+        wall_time=_time.time() - t0,
+        conv_acc=acc_best,
+        reached_target=reached,
+        target_acc=stop.target_acc,
+        api_calls=env.meter.total_calls,
+        bytes_transferred=env.meter.bytes,
+        wi_avg=wi,
+        history=history,
+        worker_iter_times=itimes,
+        gup_trace=gup_trace,
+        alloc_trace=alloc_trace,
+        calls_by_kind=dict(env.meter.calls_by_kind),
+    )

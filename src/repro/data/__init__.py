@@ -1,0 +1,12 @@
+from repro.data.synthetic import (
+    make_image_dataset,
+    make_lm_dataset,
+    dirichlet_partition,
+    iid_partition,
+)
+from repro.data.pipeline import ShardedLoader, Prefetcher
+
+__all__ = [
+    "make_image_dataset", "make_lm_dataset", "dirichlet_partition",
+    "iid_partition", "ShardedLoader", "Prefetcher",
+]

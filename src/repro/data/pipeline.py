@@ -1,0 +1,84 @@
+"""Sharded input pipeline with double-buffered prefetch (paper §IV-D).
+
+``ShardedLoader`` yields per-step global batches cut along the data axis;
+``Prefetcher`` overlaps host->device transfer with compute by keeping one
+batch in flight (the TPU-native analogue of Hermes' PS->worker prefetching).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import queue as _queue
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    """Deterministic infinite batch iterator over a host-resident dataset."""
+
+    def __init__(self, data: Dict[str, np.ndarray], batch: int, *,
+                 seed: int = 0, indices: Optional[np.ndarray] = None):
+        self.data = data
+        self.batch = batch
+        self.indices = indices if indices is not None else np.arange(
+            len(next(iter(data.values()))))
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(self.indices)
+        self._cursor = 0
+
+    def set_batch(self, batch: int) -> None:
+        self.batch = batch
+
+    def set_indices(self, indices: np.ndarray) -> None:
+        """Dynamic reallocation (Hermes allocator moves the shard)."""
+        self.indices = indices
+        self._order = self.rng.permutation(self.indices)
+        self._cursor = 0
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        if self._cursor + self.batch > len(self._order):
+            self._order = self.rng.permutation(self.indices)
+            self._cursor = 0
+        idx = self._order[self._cursor:self._cursor + self.batch]
+        self._cursor += self.batch
+        return {k: v[idx] for k, v in self.data.items()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def epoch_steps(self) -> int:
+        return max(1, len(self.indices) // self.batch)
+
+
+class Prefetcher:
+    """Keeps `depth` device-resident batches in flight ahead of compute."""
+
+    def __init__(self, loader: ShardedLoader, depth: int = 2,
+                 sharding: Optional[jax.sharding.Sharding] = None):
+        self.loader = loader
+        self.sharding = sharding
+        self.q: _queue.Queue = _queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _put_device(self, batch):
+        if self.sharding is not None:
+            return {k: jax.device_put(v, self.sharding) for k, v in batch.items()}
+        return {k: jax.device_put(v) for k, v in batch.items()}
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = next(self.loader)
+            try:
+                self.q.put(self._put_device(batch), timeout=1.0)
+            except _queue.Full:
+                continue
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the framework's compute hot spots:
+#   flash_attention      — blocked online-softmax attention (GQA-aware)
+#   rwkv6_scan           — chunked WKV6 recurrence (data-dependent decay)
+#   rglru_scan           — RG-LRU linear recurrence
+#   quantize             — int8 blockwise gradient-push compression
+#   loss_weighted_update — fused Algorithm-2 merge
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.

@@ -1,0 +1,71 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the kernels lower natively; elsewhere (this CPU
+container, unit tests) they run in interpret mode, which executes the kernel
+body with the same blocking/masking logic.  Model code calls these through
+``impl="pallas"`` switches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _wkv
+from repro.kernels import rglru_scan as _lru
+from repro.kernels import quantize as _qz
+from repro.kernels import loss_weighted_update as _lwu
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_positions=None,
+                    kv_positions=None, scale=None, block_q=128, block_k=128):
+    """Model-layout wrapper: q (B,S,H,D); k,v (B,S,K,D) -> (B,S,H,Dv)."""
+    del q_positions, kv_positions  # kernel assumes contiguous positions
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              scale=scale, block_q=block_q, block_k=block_k,
+                              interpret=_interpret())
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, log_w, u, state, *, chunk=64):
+    """Model-layout wrapper: (B,T,H,D) tensors -> (y (B,T,H,D), state)."""
+    rt, kt, vt, lwt = (jnp.swapaxes(a, 1, 2) for a in (r, k, v, log_w))
+    y, sT = _wkv.wkv6_chunked(rt, kt, vt, lwt, u, state, chunk=chunk,
+                              interpret=_interpret())
+    return jnp.swapaxes(y, 1, 2), sT
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w"))
+def rglru(a, b, h0=None, *, chunk=128, block_w=512):
+    """a, b: (B,T,W) -> (h (B,T,W), h_T (B,W))."""
+    return _lru.rglru_chunked(a, b, h0, chunk=chunk, block_w=block_w,
+                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_int8(x, *, block=256):
+    return _qz.quantize_int8(x, block=block, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def dequantize_int8(q, scales, shape):
+    return _qz.dequantize_int8(q, scales, tuple(shape), interpret=_interpret())
+
+
+@jax.jit
+def loss_weighted_update(g, pods, w1, w2, denom, any_push):
+    return _lwu.loss_weighted_update(g, pods, w1, w2, denom, any_push,
+                                     interpret=_interpret())

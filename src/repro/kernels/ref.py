@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function mirrors its kernel's contract exactly, written as plain jnp
+with no blocking — slow but unambiguous.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B,H,Sq,D); k,v: (B,K,Skv,D[v]) -> (B,H,Sq,Dv)."""
+    B, H, Sq, D = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, K, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, v.shape[-1]).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, log_w, u, state) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential WKV6.  r,k,v,log_w: (B,H,T,D); u: (H,D); state: (B,H,D,D)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,D)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), S
+
+
+def rglru_ref(a, b, h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential h_t = a_t h_{t-1} + b_t.  a,b: (B,T,W)."""
+    if h0 is None:
+        h0 = jnp.zeros_like(a[:, 0])
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+                           jnp.moveaxis(b, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def quantize_int8_ref(x, block=256):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scales, shape):
+    flat = (q.astype(jnp.float32) * scales).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def loss_weighted_update_ref(g, pods, w1, w2, denom, any_push):
+    acc = w1 * g.astype(jnp.float32) + jnp.tensordot(
+        jnp.asarray(w2, jnp.float32), pods.astype(jnp.float32), axes=(0, 0))
+    merged = acc / denom
+    return jnp.where(jnp.asarray(any_push, bool), merged,
+                     g.astype(jnp.float32)).astype(g.dtype)

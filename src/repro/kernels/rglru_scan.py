@@ -1,0 +1,90 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel (RecurrentGemma / Griffin).
+
+    h_t = a_t * h_{t-1} + b_t        (diagonal, per-channel a_t in (0,1))
+
+TPU adaptation of the GPU scan kernel: the channel vector state stays in
+VMEM scratch across sequential chunk grid steps; within a chunk the
+recurrence runs as a fori_loop over VMEM-resident rows (no HBM traffic per
+timestep, which is what the lax.scan formulation pays).  The channel width
+is tiled so arbitrary lru_width shards map onto 128-lane registers.
+
+Grid: (B, W/block_w, T/C) with the chunk axis innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)   # (C, Wb)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        hT_ref[0] = h
+
+
+def rglru_chunked(a: jnp.ndarray, b: jnp.ndarray,
+                  h0: Optional[jnp.ndarray] = None, *, chunk: int = 128,
+                  block_w: int = 512, interpret: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: (B, T, W) fp32; h0: (B, W) fp32 or None.  Returns (h_seq, h_T)."""
+    B, T, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    C = min(chunk, T)
+    pad_t = (-T) % C
+    bw = min(block_w, W)
+    pad_w = (-W) % bw
+    if pad_t or pad_w:
+        # pad timesteps with the identity element (a=1, b=0) so the carried
+        # state is untouched by padding
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_w)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_w)))
+    if pad_w:
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_w)))
+    nc = a.shape[1] // C
+    nw = a.shape[2] // bw
+
+    kern = functools.partial(_kernel, chunk=C)
+    y, hT = pl.pallas_call(
+        kern,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, bw), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, C, bw), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, bw), lambda bi, wi, ci: (bi, ci, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, ci: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc * C, nw * bw), jnp.float32),
+            jax.ShapeDtypeStruct((B, nw * bw), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y[:, :T, :W], hT[:, :W]

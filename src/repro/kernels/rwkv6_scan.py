@@ -1,0 +1,121 @@
+"""WKV6 chunked-scan Pallas TPU kernel (RWKV6 data-dependent decay).
+
+The GPU reference (CUDA wkv6) is a per-timestep warp kernel; the TPU
+adaptation re-blocks the recurrence into chunks of length C so the three
+inner products per chunk become MXU matmuls:
+
+  inter-chunk:  y += (r .* exp(L_{t-1})) @ S            (C,D)@(D,D)
+  intra-chunk:  y += tril_strict[(r.*e^{L-}) (k.*e^{-L})^T] @ v   (C,C)@(C,D)
+  diag bonus :  y += (r . (u*k)) v
+  state      :  S  = e^{L_C} .* S + (k .* e^{L_C - L})^T @ v
+
+with L the within-chunk cumulative log-decay (fp32, clamped at +-30 — decay
+products below e^-30 are numerically zero).  The chunk axis is the innermost
+(sequential) grid dimension; the (D,D) state lives in VMEM scratch and never
+round-trips to HBM between chunks.
+
+Grid: (B, H, T/C); blocks r,k,v,lw: (1,1,C,D); u: (1,D); y: (1,1,C,D);
+final state: (1,1,D,D) written at the last chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CLAMP = 30.0
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sT_ref,
+            state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)     # (C, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)        # (D,)
+    S = state_ref[...]                      # (D, D) key x value
+
+    L = jnp.cumsum(lw, axis=0)
+    Lm1 = L - lw
+    r_dec = r * jnp.exp(jnp.clip(Lm1, -CLAMP, CLAMP))
+    # inter-chunk contribution
+    y = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk strict-lower attention with channel-wise decay
+    k_s = k * jnp.exp(jnp.clip(-L, -CLAMP, CLAMP))
+    scores = jax.lax.dot_general(r_dec, k_s, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(si < ti, scores, 0.0)
+    y = y + jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # diagonal bonus
+    diag = jnp.sum(r * (u[None, :] * k), axis=1, keepdims=True)
+    y = y + diag * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    Lc = L[-1]                               # (D,)
+    k_dec = k * jnp.exp(jnp.clip(Lc[None, :] - L, -CLAMP, CLAMP))
+    kv = jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(jnp.clip(Lc, -CLAMP, CLAMP))[:, None] * S + kv
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        sT_ref[0, 0] = state_ref[...]
+
+
+def wkv6_chunked(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 log_w: jnp.ndarray, u: jnp.ndarray, state: jnp.ndarray, *,
+                 chunk: int = 64, interpret: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,log_w: (B, H, T, D); u: (H, D); state: (B, H, D, D) fp32.
+
+    Returns (y: (B,H,T,D) in r.dtype, final state fp32).
+    """
+    B, H, T, D = r.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = r.shape[2] // C
+
+    kern = functools.partial(_kernel, chunk=C)
+    y, sT = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, D), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc * C, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u, state.astype(jnp.float32))
+    return y[:, :, :T], sT

@@ -1,0 +1,99 @@
+"""Elastic restart demo: checkpoint -> "node failure" -> resume on a smaller
+mesh with re-sharded state and re-balanced batch allocation.
+
+This is the fault-tolerance path a 1000-node deployment needs: the
+checkpoint is mesh-agnostic (host npz + manifest), restore device_puts onto
+whatever mesh survives, and the Hermes allocator re-splits the global batch
+for the new capacity.  Run under 8 virtual devices:
+
+    REPRO_ELASTIC_DEVICES=8 python -m repro.launch.elastic
+"""
+import os
+if os.environ.get("REPRO_ELASTIC_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_ELASTIC_DEVICES"])
+
+import json
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShapeConfig, OptimizerConfig, ParallelConfig
+from repro.configs import get_smoke_config
+from repro.checkpoint import Checkpointer
+from repro.core.allocator import dual_binary_search
+from repro.dist.sharding import param_sharding_tree
+from repro.launch.mesh import arch_rules
+from repro.launch.steps import build_setup
+
+
+def run_demo(arch: str = "qwen3-8b", steps_before: int = 5,
+             steps_after: int = 5, seed: int = 0) -> dict:
+    cfg = get_smoke_config(arch)
+    parallel = ParallelConfig()
+    opt = OptimizerConfig(name="adamw", lr=1e-3)
+    ndev = jax.device_count()
+    assert ndev >= 4, "need >=4 devices (set REPRO_ELASTIC_DEVICES=8)"
+    batch = 16
+
+    def make(mesh_shape):
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+        rules = arch_rules(cfg, mesh, parallel, batch=batch)
+        shape = ShapeConfig("t", 32, batch, "train")
+        setup = build_setup("train", cfg, shape, rules, parallel, opt,
+                            impl="auto")
+        step = jax.jit(setup.step_fn, in_shardings=setup.in_shardings,
+                       out_shardings=setup.out_shardings)
+        return mesh, rules, setup, step
+
+    def batch_for(rng):
+        t = rng.integers(0, cfg.vocab_size, (batch, 32))
+        return {"tokens": jnp.asarray(t, jnp.int32),
+                "targets": jnp.asarray(t, jnp.int32)}
+
+    rng = np.random.default_rng(seed)
+    out = {}
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = Checkpointer(ckdir, async_write=False)
+
+        # phase 1: full mesh
+        mesh, rules, setup, step = make((ndev // 4, 4))
+        with mesh:
+            state = jax.jit(setup.meta["init_state"],
+                            out_shardings=setup.state_sharding)(
+                                jax.random.PRNGKey(seed))
+            losses = []
+            for _ in range(steps_before):
+                state, loss = step(state, batch_for(rng))
+                losses.append(float(loss))
+        ck.save(state, steps_before)
+        out["phase1_losses"] = losses
+        out["phase1_mesh"] = list(mesh.devices.shape)
+
+        # phase 2: "half the nodes died" -> smaller mesh, re-shard state
+        mesh2, rules2, setup2, step2 = make((max(1, ndev // 8), 4))
+        with mesh2:
+            template = jax.eval_shape(setup2.meta["init_state"],
+                                      jax.random.PRNGKey(seed))
+            restored, at_step = ck.restore(
+                template, shardings=setup2.state_sharding)
+            losses2 = []
+            for _ in range(steps_after):
+                restored, loss = step2(restored, batch_for(rng))
+                losses2.append(float(loss))
+        out["phase2_losses"] = losses2
+        out["phase2_mesh"] = list(mesh2.devices.shape)
+        out["resumed_from_step"] = at_step
+
+        # allocator re-balances per-node work for the smaller cluster
+        a = dual_binary_search(k=0.02, t_target=1.0,
+                               dss_domain=(32, 4096))
+        out["realloc"] = {"dss": a.dss, "mbs": a.mbs}
+        out["loss_continuous"] = losses2[0] < losses[0]
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run_demo(), indent=2))

@@ -1,0 +1,110 @@
+"""Production meshes + per-architecture axis rules.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  Axis rules are derived
+per architecture: a logical axis maps to the "model" mesh axis only when the
+corresponding dimension is divisible by the axis size (e.g. 56 query heads
+do not 16-way shard -> head sharding disabled for llava, the flat projection
+output is sharded instead and GSPMD falls back to an all-gather at the
+reshape; see DESIGN.md and the §Perf head-padding hillclimb).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.dist.sharding import AxisRules, make_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def arch_parallel_config(arch: str, optimized: bool = False) -> ParallelConfig:
+    """Parallelism policy per assigned architecture.
+
+    ``optimized=True`` applies the §Perf hillclimb results: gradient
+    accumulation for the HBM-heaviest archs (activation temporaries shrink
+    by 1/microbatch at a small collective-traffic cost).
+    """
+    fsdp = arch in ("grok-1-314b", "granite-34b", "llava-next-34b")
+    mb = 1
+    if optimized:
+        mb = {"grok-1-314b": 4, "llava-next-34b": 2, "granite-34b": 2,
+              "deepseek-v2-lite-16b": 2, "recurrentgemma-2b": 4}.get(arch, 1)
+    return ParallelConfig(fsdp=fsdp, microbatch=mb)
+
+
+def arch_rules(cfg: ModelConfig, mesh: Optional[Mesh], parallel: ParallelConfig,
+               *, multi_pod: bool = False, decode: bool = False,
+               batch: int = 0, tp_pad_heads: bool = False) -> AxisRules:
+    """Divisibility-aware logical->mesh rules for one (arch, mesh, mode)."""
+    tp = mesh_axis_size(mesh, "model") if mesh is not None else 16
+    dp = mesh_axis_size(mesh, "data") if mesh is not None else 16
+    pods = mesh_axis_size(mesh, "pod") if (mesh is not None and multi_pod) else 1
+
+    def div(n: int) -> bool:
+        return n > 0 and n % tp == 0
+
+    extra: Dict[str, object] = {}
+    # heads shard only when divisible; tp_pad_heads pads ACTIVATION heads
+    # (per KV group, function-preserving) so act_heads can shard even when
+    # the parameter head dim cannot
+    extra["heads"] = "model" if div(cfg.num_heads) else None
+    extra["act_heads"] = ("model" if (div(cfg.num_heads) or tp_pad_heads)
+                          else None)
+    extra["kv_heads"] = "model" if div(cfg.num_kv_heads) else None
+    extra["act_kv"] = "model" if div(cfg.num_kv_heads) else None
+    extra["vocab"] = "model" if div(cfg.vocab_size) else None
+    extra["act_vocab"] = "model" if div(cfg.vocab_size) else None
+    extra["ff"] = "model" if div(cfg.d_ff) else None
+    extra["act_ff"] = "model" if div(cfg.d_ff) else None
+    if cfg.recurrent is not None:
+        w = cfg.recurrent.lru_width or cfg.d_model
+        extra["lru"] = "model" if div(w) else None
+    if cfg.moe is not None:
+        if parallel.expert_parallel and div(cfg.moe.num_experts):
+            extra["expert"] = "model"
+            extra["expert_ff"] = None
+        else:
+            # too few experts for EP -> TP inside each expert
+            extra["expert"] = None
+            extra["expert_ff"] = "model" if div(cfg.moe.expert_ff) else None
+
+    # batch sharding: drop mesh axes that don't divide the global batch
+    batch_axes = []
+    if multi_pod and pods > 1 and batch % pods == 0:
+        batch_axes.append("pod")
+    eff = batch // (pods if "pod" in batch_axes else 1)
+    if batch % ((pods if "pod" in batch_axes else 1) * dp) == 0 and eff >= dp:
+        batch_axes.append("data")
+    extra["batch"] = tuple(batch_axes) if batch_axes else None
+    extra["moe_group"] = extra["batch"]
+
+    # decode caches: shard the cache sequence dim over "model" when the KV
+    # heads can't shard (MQA) — bounds per-device cache memory
+    if decode:
+        extra["cache_seq"] = "model" if not div(cfg.num_kv_heads) else None
+        extra["seq"] = None  # single-token activations: no SP
+    else:
+        extra["cache_seq"] = None
+
+    if parallel.fsdp:
+        # with batch not sharding "data" (tiny serve batches), FSDP over an
+        # idle data axis is still valid (pure weight sharding)
+        extra.setdefault("embed", "data")
+        extra.setdefault("qkv", "data")
+
+    rules = make_rules(mesh, fsdp=parallel.fsdp,
+                       sequence_parallel=parallel.sequence_parallel and not decode,
+                       multi_pod=multi_pod, extra=extra)
+    return rules

@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a prompt batch, then decode tokens.
+
+CPU-scale by default (smoke configs); the same step functions lower on the
+production mesh (see launch/steps.py + the decode dry-run cells).
+
+    python -m repro.launch.serve --preset lmtiny --batch 4 --prompt-len 32 \
+        --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import _preset
+from repro.models import init_lm, init_cache, decode_step, prefill_step
+
+
+def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
+          temperature: float = 0.0):
+    params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen + 1
+    cache = init_cache(cfg, batch, max_len,
+                       enc_len=prompt_len if cfg.is_encoder_decoder else 0,
+                       dtype=jnp.bfloat16 if cfg.dtype == "bfloat16"
+                       else jnp.float32)
+    rng = np.random.default_rng(seed)
+    if cfg.is_encoder_decoder:
+        prompt = {"frames": jnp.asarray(
+            rng.normal(size=(batch, prompt_len, cfg.d_model)), jnp.float32)}
+    else:
+        prompt = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+
+    prefill_j = jax.jit(lambda p, c, b: prefill_step(p, c, b, cfg))
+    decode_j = jax.jit(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+
+    t0 = time.time()
+    logits, cache = prefill_j(params, cache, prompt)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    start = 1 if cfg.is_encoder_decoder else prompt_len
+    for i in range(gen):
+        logits, cache = decode_j(params, cache, tok, jnp.int32(start + i))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    tok.block_until_ready()
+    t_decode = time.time() - t0
+    toks = jnp.concatenate(out_tokens, axis=1)
+    return {
+        "prefill_s": round(t_prefill, 3),
+        "decode_s": round(t_decode, 3),
+        "decode_tok_per_s": round(batch * gen / max(t_decode, 1e-9), 1),
+        "generated": np.asarray(toks)[:, :8].tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="lmtiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    cfg = _preset(args.preset)
+    out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                gen=args.gen)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,322 @@
+"""jit-able step builders (train / prefill / decode) with full shardings.
+
+``make_*_setup`` returns everything the trainer, server, and the dry-run
+need: the step function, abstract state (via eval_shape — no allocation),
+and the sharding trees derived from the parameter logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.config import (
+    ModelConfig, OptimizerConfig, ParallelConfig, ShapeConfig,
+)
+from repro.dist.sharding import AxisRules, param_sharding_tree
+from repro.models import lm as LM
+from repro.optim import make_optimizer
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class StepSetup:
+    step_fn: Any                 # callable (pre-jit)
+    abstract_args: Tuple         # eval_shape'd positional args
+    in_shardings: Tuple
+    out_shardings: Any
+    state_sharding: Any          # sharding tree of the persistent state
+    meta: Dict[str, Any]
+
+
+def _shard_tree(axes_tree: Tree, rules: AxisRules) -> Tree:
+    return param_sharding_tree(axes_tree, rules)
+
+
+def abstract_init_lm(cfg: ModelConfig, key) -> Tuple[Tree, Tree]:
+    """eval_shape'd params + (static) axes tree, with no allocation."""
+    captured = {}
+
+    def f(k):
+        params, axes = LM.init_lm(cfg, k)
+        captured["axes"] = axes  # static metadata smuggled out of the trace
+        return params
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, captured["axes"]
+
+
+def _named(rules: AxisRules, *axes) -> NamedSharding:
+    return rules.sharding(list(axes))
+
+
+def _batch_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                     rules: AxisRules) -> Dict[str, NamedSharding]:
+    out: Dict[str, NamedSharding] = {}
+    specs = LM.input_specs(cfg, shape)
+    for k in specs:
+        if k in ("tokens", "targets"):
+            out[k] = _named(rules, "batch", "seq")
+        elif k in ("frames", "frontend_embeds"):
+            out[k] = _named(rules, "batch", "seq", "act_embed")
+    return out
+
+
+def _opt_rules(rules: AxisRules, parallel: ParallelConfig) -> AxisRules:
+    """ZeRO-1: optimizer state additionally shards big dims over data."""
+    if not parallel.zero1 or parallel.fsdp:
+        return rules
+    r = dict(rules.rules)
+    for k in ("qkv", "embed"):
+        if r.get(k) is None:
+            r[k] = "data"
+    return AxisRules(rules=r, mesh=rules.mesh)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def _moe_groups(rules: AxisRules) -> int:
+    """Token groups for MoE dispatch = product of batch mesh axes."""
+    if rules.mesh is None:
+        return 1
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    ax = rules.rules.get("batch")
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else ax
+    g = 1
+    for a in axes:
+        g *= sizes.get(a, 1)
+    return g
+
+
+def make_train_setup(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules,
+                     parallel: ParallelConfig, opt_cfg: OptimizerConfig, *,
+                     impl: str = "blocked", moe_impl: str = "sorted",
+                     seed: int = 0) -> StepSetup:
+    optimizer = make_optimizer(opt_cfg,
+                               master_weights=(cfg.dtype == "bfloat16"
+                                               and cfg.param_dtype == "float32"))
+
+    def init_state(key):
+        params, _ = LM.init_lm(cfg, key)
+        if cfg.dtype == "bfloat16":
+            params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params)
+        opt_state = optimizer.init(params)
+        return {"params": params, "opt": opt_state, "step": jnp.int32(0)}
+
+    key = jax.random.PRNGKey(seed)
+    abstract_state = jax.eval_shape(init_state, key)
+    _, param_axes = abstract_init_lm(cfg, key)
+
+    param_shardings = _shard_tree(param_axes, rules)
+    orules = _opt_rules(rules, parallel)
+    opt_param_shardings = _shard_tree(param_axes, orules)
+    opt_shardings = {}
+    for k, v in abstract_state["opt"].items():
+        opt_shardings[k] = (_named(rules,) if k == "step"
+                            else opt_param_shardings)
+    state_sharding = {"params": param_shardings, "opt": opt_shardings,
+                      "step": _named(rules,)}
+
+    batch_specs = LM.input_specs(cfg, shape)
+    batch_shardings = _batch_shardings(cfg, shape, rules)
+
+    moe_groups = _moe_groups(rules)
+    mb = max(1, parallel.microbatch)
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            if mb <= 1:
+                return LM.lm_loss(params, batch, cfg, rules, impl=impl,
+                                  moe_impl=moe_impl, moe_groups=moe_groups)
+            # gradient accumulation: scan over microbatches -> activation
+            # temporaries shrink by 1/mb, grads accumulate through the scan
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def mb_step(acc, mbatch):
+                l = LM.lm_loss(params, mbatch, cfg, rules, impl=impl,
+                               moe_impl=moe_impl, moe_groups=moe_groups)
+                return acc + l, None
+
+            total, _ = jax.lax.scan(mb_step, jnp.float32(0.0), split)
+            return total / mb
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        params, opt_state = optimizer.apply(state["params"], grads,
+                                            state["opt"])
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, loss
+
+    out_shardings = (state_sharding, _named(rules,))
+    return StepSetup(
+        step_fn=train_step,
+        abstract_args=(abstract_state, batch_specs),
+        in_shardings=(state_sharding, batch_shardings),
+        out_shardings=out_shardings,
+        state_sharding=state_sharding,
+        meta={"init_state": init_state, "optimizer": optimizer,
+              "param_axes": param_axes},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _cache_shardings(cfg: ModelConfig, abstract_cache: Tree,
+                     rules: AxisRules) -> Tree:
+    """Sharding tree for the decode cache."""
+    def leaf_spec(path_str: str, leaf) -> NamedSharding:
+        nd = len(leaf.shape)
+        if "pos" in path_str:
+            return _named(rules, *([None] * nd))
+        # stacked kv caches: (L, B, S, K, D); per-block lists: (B, S, K, D)
+        if nd == 5:
+            return _named(rules, None, "batch", "cache_seq", "kv_heads", None)
+        if nd == 4 and "wkv" in path_str:
+            return _named(rules, "batch", None, None, None)
+        if nd == 5 and "wkv" in path_str:
+            return _named(rules, None, "batch", None, None, None)
+        if nd == 4:
+            return _named(rules, "batch", "cache_seq", "kv_heads", None)
+        if nd == 3:  # (L?, B, d) states or (B, S, r) latents
+            return _named(rules, "batch" if "wkv" not in path_str else None,
+                          None, None)
+        if nd == 2:
+            return _named(rules, "batch", None)
+        return _named(rules, *([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    shardings = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = len(leaf.shape)
+        if "wkv" in pstr:
+            # rwkv states: (L,B,H,D,D) stacked or (B,H,D,D)
+            spec = [None] * nd
+            spec[nd - 4] = "batch"
+            shardings.append(_named(rules, *spec))
+        elif "pos" in pstr:
+            shardings.append(_named(rules, *([None] * nd)))
+        elif pstr.endswith("c_kv") or pstr.endswith("k_rope"):
+            # MLA latents: (L,B,S,r) stacked or (B,S,r)
+            if nd == 4:
+                shardings.append(_named(rules, None, "batch", "cache_seq",
+                                        None))
+            else:
+                shardings.append(_named(rules, "batch", "cache_seq", None))
+        elif nd == 5:
+            # stacked kv cache: (L, B, S, K, D)
+            shardings.append(_named(rules, None, "batch", "cache_seq",
+                                    "kv_heads", None))
+        elif nd == 4:
+            # per-block kv cache: (B, S, K, D)
+            shardings.append(_named(rules, "batch", "cache_seq", "kv_heads",
+                                    None))
+        elif nd == 3:
+            # per-block states (B, CW-1, W) / stacked (L, B, d)
+            if pstr.endswith("conv"):
+                shardings.append(_named(rules, "batch", None, None))
+            else:
+                shardings.append(_named(rules, None, "batch", None))
+        elif nd == 2:
+            shardings.append(_named(rules, "batch", None))
+        else:
+            shardings.append(_named(rules, *([None] * nd)))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def _serve_param_state(cfg: ModelConfig, rules: AxisRules, seed: int):
+    key = jax.random.PRNGKey(seed)
+    abstract_params, param_axes = abstract_init_lm(cfg, key)
+    if cfg.dtype == "bfloat16":
+        abstract_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            abstract_params)
+    return abstract_params, _shard_tree(param_axes, rules)
+
+
+def make_prefill_setup(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules,
+                       *, impl: str = "blocked", moe_impl: str = "sorted",
+                       seed: int = 0) -> StepSetup:
+    abstract_params, param_shardings = _serve_param_state(cfg, rules, seed)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S if cfg.is_encoder_decoder else 0
+    abstract_cache = jax.eval_shape(
+        functools.partial(LM.init_cache, cfg, B, S, enc_len=enc_len),)
+    cache_shardings = _cache_shardings(cfg, abstract_cache, rules)
+    batch_specs = {k: v for k, v in LM.input_specs(cfg, shape).items()
+                   if k != "targets"}
+    batch_shardings = {k: v for k, v in
+                       _batch_shardings(cfg, shape, rules).items()
+                       if k in batch_specs}
+
+    moe_groups = _moe_groups(rules)
+
+    def prefill(params, cache, batch):
+        return LM.prefill_step(params, cache, batch, cfg, rules, impl=impl,
+                               moe_impl=moe_impl, moe_groups=moe_groups)
+
+    logits_sh = _named(rules, "batch", None, "act_vocab")
+    return StepSetup(
+        step_fn=prefill,
+        abstract_args=(abstract_params, abstract_cache, batch_specs),
+        in_shardings=(param_shardings, cache_shardings, batch_shardings),
+        out_shardings=(logits_sh, cache_shardings),
+        state_sharding=cache_shardings,
+        meta={"param_shardings": param_shardings},
+    )
+
+
+def make_decode_setup(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules,
+                      *, impl: str = "auto", moe_impl: str = "sorted",
+                      seed: int = 0) -> StepSetup:
+    abstract_params, param_shardings = _serve_param_state(cfg, rules, seed)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = min(4096, S) if cfg.is_encoder_decoder else 0
+    abstract_cache = jax.eval_shape(
+        functools.partial(LM.init_cache, cfg, B, S, enc_len=enc_len),)
+    cache_shardings = _cache_shardings(cfg, abstract_cache, rules)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, cache, tok, p):
+        return LM.decode_step(params, cache, tok, p, cfg, rules, impl=impl,
+                              moe_impl=moe_impl)
+
+    tok_sh = _named(rules, "batch", None)
+    pos_sh = _named(rules,)
+    logits_sh = _named(rules, "batch", None, "act_vocab")
+    return StepSetup(
+        step_fn=decode,
+        abstract_args=(abstract_params, abstract_cache, tokens, pos),
+        in_shardings=(param_shardings, cache_shardings, tok_sh, pos_sh),
+        out_shardings=(logits_sh, cache_shardings),
+        state_sharding=cache_shardings,
+        meta={"param_shardings": param_shardings},
+    )
+
+
+def build_setup(kind: str, cfg: ModelConfig, shape: ShapeConfig,
+                rules: AxisRules, parallel: ParallelConfig,
+                opt_cfg: Optional[OptimizerConfig] = None, **kw) -> StepSetup:
+    if kind == "train":
+        return make_train_setup(cfg, shape, rules, parallel,
+                                opt_cfg or OptimizerConfig(), **kw)
+    if kind == "prefill":
+        return make_prefill_setup(cfg, shape, rules, **kw)
+    if kind == "decode":
+        return make_decode_setup(cfg, shape, rules, **kw)
+    raise KeyError(kind)

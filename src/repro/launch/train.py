@@ -1,0 +1,224 @@
+"""End-to-end training driver.
+
+Two modes:
+
+* ``single``  — standard data-parallel training of one model replica with
+  prefetching input pipeline, checkpointing, and optional restore.
+* ``hermes``  — the paper's technique at LM scale (Level B): N pod replicas
+  train locally on disjoint shards; every round each pod's eval loss feeds
+  HermesGUP; gate-opening pods merge into the global model via loss-based
+  SGD (the device-resident generalization in dist/hermes_sync.py) and
+  refresh.  Communication (the merge collective) only carries compressed
+  payloads on rounds where a gate opens.
+
+CPU-scale presets keep this runnable in the container (examples/ use them);
+on a real pod the same functions jit under the production mesh.
+
+Usage:
+    python -m repro.launch.train --preset lm100m --steps 300
+    python -m repro.launch.train --preset lm100m --hermes --pods 4 --steps 300
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    ModelConfig, HermesConfig, OptimizerConfig, FAMILY_DENSE, replace,
+)
+from repro.configs import get_smoke_config
+from repro.checkpoint import Checkpointer
+from repro.core.gup import gup_state_jax
+from repro.data.synthetic import make_lm_dataset
+from repro.dist.hermes_sync import hermes_pod_state, hermes_round
+from repro.models import init_lm, lm_loss
+from repro.optim import make_optimizer
+
+Tree = Any
+
+PRESETS: Dict[str, ModelConfig] = {}
+
+
+def _preset(name: str) -> ModelConfig:
+    if name == "lm100m":
+        return ModelConfig(
+            name="lm100m", family=FAMILY_DENSE, num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32000,
+            qk_norm=True, remat=False, dtype="float32")
+    if name == "lmtiny":
+        return ModelConfig(
+            name="lmtiny", family=FAMILY_DENSE, num_layers=2, d_model=64,
+            num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+            remat=False, dtype="float32")
+    return get_smoke_config(name)
+
+
+def make_batches(tokens: np.ndarray, batch: int, seq: int, rng) -> Any:
+    n = (len(tokens) - 1) // seq
+    while True:
+        idx = rng.integers(0, n, batch)
+        x = np.stack([tokens[i * seq:(i + 1) * seq] for i in idx])
+        y = np.stack([tokens[i * seq + 1:(i + 1) * seq + 1] for i in idx])
+        yield {"tokens": jnp.asarray(x), "targets": jnp.asarray(y)}
+
+
+def train_single(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+                 opt_cfg: OptimizerConfig, ckpt_dir: Optional[str] = None,
+                 restore: bool = False, log_every: int = 20,
+                 seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    tokens = make_lm_dataset(batch * seq * 40 + 1, cfg.vocab_size, seed=seed)
+    batches = make_batches(tokens, batch, seq, rng)
+    optimizer = make_optimizer(opt_cfg)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
+    state = {"params": params, "opt": optimizer.init(params),
+             "step": jnp.int32(0)}
+    start_step = 0
+    ck = Checkpointer(ckpt_dir) if ckpt_dir else None
+    if ck and restore:
+        try:
+            state, start_step = ck.restore(state)
+            print(f"restored from step {start_step}")
+        except FileNotFoundError:
+            pass
+
+    @jax.jit
+    def step_fn(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg))(state["params"])
+        p, o = optimizer.apply(state["params"], grads, state["opt"])
+        return {"params": p, "opt": o, "step": state["step"] + 1}, loss
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, steps):
+        state, loss = step_fn(state, next(batches))
+        losses.append(float(loss))
+        if (i + 1) % log_every == 0:
+            print(f"step {i+1:5d} loss {np.mean(losses[-log_every:]):.4f} "
+                  f"({(i + 1 - start_step) / (time.time() - t0):.2f} it/s)",
+                  flush=True)
+        if ck and (i + 1) % 100 == 0:
+            ck.save(state, i + 1)
+    if ck:
+        ck.save(state, steps)
+        ck.wait()
+    return {"final_loss": float(np.mean(losses[-10:])),
+            "first_loss": losses[0], "steps": steps}
+
+
+def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+                 pods: int, opt_cfg: OptimizerConfig, hcfg: HermesConfig,
+                 ckpt_dir: Optional[str] = None, log_every: int = 20,
+                 seed: int = 0) -> Dict:
+    """Level-B Hermes: pod-stacked local training + gated merges."""
+    rng = np.random.default_rng(seed)
+    tokens = make_lm_dataset(batch * seq * 40 * pods + batch * seq + 2,
+                             cfg.vocab_size, seed=seed)
+    # held-out eval split from the SAME stream (same Markov transitions)
+    eval_tokens = tokens[-(batch * seq + 1):]
+    shards = np.array_split(tokens[:-(batch * seq + 1)], pods)
+    batch_iters = [make_batches(s, batch, seq, np.random.default_rng(seed + i))
+                   for i, s in enumerate(shards)]
+    eval_batch = next(make_batches(eval_tokens, min(batch, 8), seq,
+                                   np.random.default_rng(seed)))
+
+    optimizer = make_optimizer(opt_cfg)
+    params0, _ = init_lm(cfg, jax.random.PRNGKey(seed))
+    pod_params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (pods,) + x.shape).copy(), params0)
+    pod_opt = jax.vmap(optimizer.init)(pod_params)
+    w_global = params0
+    L_global = jnp.float32(1e9)
+    gup = hermes_pod_state(hcfg, pods)
+    error = None
+
+    @jax.jit
+    def pod_step(pod_params, pod_opt, batches):
+        def one(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm_loss(p, batch, cfg))(params)
+            p, o = optimizer.apply(params, grads, opt)
+            return p, o, loss
+        return jax.vmap(one)(pod_params, pod_opt, batches)
+
+    @jax.jit
+    def pod_eval(pod_params):
+        return jax.vmap(lambda p: lm_loss(p, eval_batch, cfg))(pod_params)
+
+    @jax.jit
+    def eval_global(params):
+        return lm_loss(params, eval_batch, cfg)
+
+    merges, rounds = 0, 0
+    t0 = time.time()
+    history = []
+    for i in range(steps):
+        stacked = {k: jnp.stack([next(b)[k] for b in batch_iters])
+                   for k in ("tokens", "targets")}
+        pod_params, pod_opt, losses = pod_step(pod_params, pod_opt, stacked)
+        if (i + 1) % hcfg.lam == 0 or i == 0:
+            rounds += 1
+            pod_losses = pod_eval(pod_params)
+            out = hermes_round(pod_params, gup, pod_losses, w_global,
+                               L_global, hcfg, error=error)
+            pod_params, w_global = out["pod_params"], out["w_global"]
+            gup, error = out["gup"], out["error"]
+            if bool(out["any_push"]):
+                merges += 1
+                L_global = eval_global(w_global)
+            history.append((i + 1, float(jnp.mean(pod_losses)),
+                            int(jnp.sum(out["gates"]))))
+        if (i + 1) % log_every == 0:
+            print(f"step {i+1:5d} pod-loss {float(jnp.mean(losses)):.4f} "
+                  f"global-L {float(L_global):.4f} merges={merges}/{rounds}",
+                  flush=True)
+    gl = float(eval_global(w_global))
+    pl = [float(x) for x in pod_eval(pod_params)]
+    return {"global_loss": gl, "merges": merges, "rounds": rounds,
+            "pod_losses": pl, "best_pod_loss": min(pl),
+            "history": history, "steps": steps,
+            "comm_fraction": merges / max(rounds, 1)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="lmtiny")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--hermes", action="store_true")
+    ap.add_argument("--pods", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--alpha", type=float, default=-1.3)
+    ap.add_argument("--beta", type=float, default=0.1)
+    ap.add_argument("--lam", type=int, default=5)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args()
+
+    cfg = _preset(args.preset)
+    opt = OptimizerConfig(name="adamw", lr=args.lr)
+    if args.hermes:
+        hcfg = HermesConfig(alpha=args.alpha, beta=args.beta, lam=args.lam,
+                            eta=1.0)
+        out = train_hermes(cfg, steps=args.steps, batch=args.batch,
+                           seq=args.seq, pods=args.pods, opt_cfg=opt,
+                           hcfg=hcfg, ckpt_dir=args.ckpt)
+    else:
+        out = train_single(cfg, steps=args.steps, batch=args.batch,
+                           seq=args.seq, opt_cfg=opt, ckpt_dir=args.ckpt,
+                           restore=args.restore)
+    print(json.dumps({k: v for k, v in out.items() if k != "history"},
+                     indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.models.lm import (
+    init_lm,
+    lm_forward,
+    lm_loss,
+    init_cache,
+    decode_step,
+    prefill_step,
+    input_specs,
+)
+
+__all__ = [
+    "init_lm", "lm_forward", "lm_loss", "init_cache", "decode_step",
+    "prefill_step", "input_specs",
+]

@@ -1,0 +1,88 @@
+"""The paper's evaluation models: MNIST CNN (~110K) and downsized AlexNet (~990K).
+
+Plain ``lax.conv_general_dilated`` + max-pool + dense, NHWC.  These are the
+models Hermes trains in the Level-A reproduction (see core/simulator.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, dense_init, zeros_init, split_tree
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    return dense_init(key, (kh, kw, cin, cout), (None, None, None, None),
+                      scale=(2.0 / (kh * kw * cin)) ** 0.5)
+
+
+def init_cnn(key, *, image_shape: Tuple[int, int, int],
+             channels: Tuple[int, ...], hidden: int,
+             num_classes: int) -> Tuple[Any, Any]:
+    """Returns (params, param_axes)."""
+    h, w, cin = image_shape
+    ks = jax.random.split(key, len(channels) + 2)
+    tree: Dict[str, Any] = {}
+    c_prev = cin
+    for i, c in enumerate(channels):
+        tree[f"conv{i}"] = {
+            "w": _conv_init(ks[i], 3, 3, c_prev, c),
+            "b": zeros_init((c,), (None,)),
+        }
+        c_prev = c
+        h, w = h // 2, w // 2  # 2x2 max pool after each conv
+    flat = h * w * c_prev
+    tree["fc1"] = {"w": dense_init(ks[-2], (flat, hidden), (None, None)),
+                   "b": zeros_init((hidden,), (None,))}
+    tree["fc2"] = {"w": dense_init(ks[-1], (hidden, num_classes), (None, None)),
+                   "b": zeros_init((num_classes,), (None,))}
+    return split_tree(tree)
+
+
+def cnn_forward(params, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) -> logits (B, classes)."""
+    x = images
+    i = 0
+    while f"conv{i}" in params:
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["b"])
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        i += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params, batch) -> jnp.ndarray:
+    logits = cnn_forward(params, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def cnn_accuracy(params, batch) -> jnp.ndarray:
+    logits = cnn_forward(params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def make_paper_model(arch: str, key):
+    """Build the paper's model by arch id ('mnist-cnn' | 'cifar-alexnet')."""
+    if arch == "mnist-cnn":
+        from repro.configs import mnist_cnn as C
+    elif arch == "cifar-alexnet":
+        from repro.configs import cifar_alexnet as C
+    else:
+        raise KeyError(arch)
+    return init_cnn(key, image_shape=C.IMAGE_SHAPE, channels=C.CHANNELS,
+                    hidden=C.HIDDEN, num_classes=C.NUM_CLASSES)

@@ -1,0 +1,263 @@
+"""RWKV6 ("Finch") time-mix + channel-mix blocks, data-dependent decay.
+
+WKV6 recurrence per head (state S: key_dim x value_dim):
+
+    y_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+with per-channel, per-token decay ``w_t = exp(-exp(w0 + lora(x)))`` (the
+data-dependent decay that distinguishes v6 from v5).
+
+Paths: ``scan`` (exact per-step lax.scan — the oracle and the decode path)
+and ``chunked`` (intra-chunk matmul form — mirrors the Pallas kernel's math).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import AxisRules, constrain
+from repro.models.layers import P, dense_init, zeros_init, ones_init
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+DECAY_LORA = 64
+MIX_LORA = 32
+
+
+def init_time_mix(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.num_heads
+    D = cfg.resolved_head_dim
+    assert H * D == d, (H, D, d)
+    ks = jax.random.split(key, 12)
+    p: Dict[str, Any] = {
+        "mu_x": zeros_init((d,), ("embed",)),
+        "mu": zeros_init((5, d), (None, "embed")),
+        "mix_w1": dense_init(ks[0], (d, 5 * MIX_LORA), ("qkv", "lora")),
+        "mix_w2": dense_init(ks[1], (5, MIX_LORA, d), (None, "lora", "embed")),
+        "decay_base": zeros_init((d,), ("embed",)),
+        "decay_w1": dense_init(ks[2], (d, DECAY_LORA), ("qkv", "lora")),
+        "decay_w2": dense_init(ks[3], (DECAY_LORA, d), ("lora", "embed")),
+        "bonus_u": zeros_init((H, D), ("heads", "head_dim")),
+        "wr": dense_init(ks[4], (d, d), ("qkv", "ff")),
+        "wk": dense_init(ks[5], (d, d), ("qkv", "ff")),
+        "wv": dense_init(ks[6], (d, d), ("qkv", "ff")),
+        "wg": dense_init(ks[7], (d, d), ("qkv", "ff")),
+        "wo": dense_init(ks[8], (d, d), ("ff", "qkv")),
+        "ln_scale": ones_init((d,), ("embed",)),
+        "ln_bias": zeros_init((d,), ("embed",)),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shift right by one along time; `prev` supplies the t=-1 row (decode)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x: jnp.ndarray, xprev: jnp.ndarray):
+    """Data-dependent interpolation producing the 5 mixed inputs (w,k,v,r,g)."""
+    dt = x.dtype
+    xx = xprev - x
+    base = x + xx * p["mu_x"].astype(dt)
+    z = jnp.tanh(jnp.einsum("btd,dl->btl", base, p["mix_w1"].astype(dt)))
+    B, T, _ = x.shape
+    z = z.reshape(B, T, 5, MIX_LORA)
+    off = jnp.einsum("btnl,nld->nbtd", z, p["mix_w2"].astype(dt))
+    mixed = []
+    for i in range(5):
+        mu = p["mu"][i].astype(dt) + off[i]
+        mixed.append(x + xx * mu)
+    return mixed  # [x_w, x_k, x_v, x_r, x_g]
+
+
+def _time_mix_proj(p, x, xprev, cfg: ModelConfig):
+    """Project to (r, k, v, g, log_decay) head tensors."""
+    dt = x.dtype
+    H, D = cfg.num_heads, cfg.resolved_head_dim
+    B, T, d = x.shape
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xprev)
+    r = jnp.einsum("btd,de->bte", x_r, p["wr"].astype(dt)).reshape(B, T, H, D)
+    k = jnp.einsum("btd,de->bte", x_k, p["wk"].astype(dt)).reshape(B, T, H, D)
+    v = jnp.einsum("btd,de->bte", x_v, p["wv"].astype(dt)).reshape(B, T, H, D)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", x_g, p["wg"].astype(dt)))
+    dec = p["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "btd,dl,le->bte", x_w.astype(jnp.float32),
+        p["decay_w1"].astype(jnp.float32), p["decay_w2"].astype(jnp.float32))
+    # log w_t = -exp(decay)  (always negative -> w in (0,1))
+    log_w = -jnp.exp(dec).reshape(B, T, H, D)
+    return r, k, v, g, log_w
+
+
+def wkv_scan(r, k, v, log_w, u, state):
+    """Exact per-step recurrence.  r,k,v,log_w: (B,T,H,D); state: (B,H,D,D).
+
+    Returns (y: (B,T,H,D), final state).  fp32 internally.
+    """
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,D) each
+        # y = r.(S + u*k^T v) ; contraction over key dim
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, log_w, u, state, chunk: int = 64,
+                clamp: float = 30.0):
+    """Chunked parallel form (mirrors the Pallas kernel).
+
+    Within a chunk, scores use channel-wise relative decays computed in log
+    space and clamped; across chunks the state is carried exactly.
+    """
+    B, T, H, D = r.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = r.shape[1] // C
+    rf = r.astype(jnp.float32).reshape(B, n, C, H, D)
+    kf = k.astype(jnp.float32).reshape(B, n, C, H, D)
+    vf = v.astype(jnp.float32).reshape(B, n, C, H, D)
+    lw = log_w.astype(jnp.float32).reshape(B, n, C, H, D)
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lwc = inp  # (B,C,H,D)
+        L = jnp.cumsum(lwc, axis=1)              # L_t = sum_{s<=t} log w_s
+        Lm1 = L - lwc                            # L_{t-1} (exclusive)
+        # inter-chunk: y_t += (r_t * exp(L_{t-1})) @ S
+        r_dec = rc * jnp.exp(jnp.clip(Lm1, -clamp, clamp))
+        y = jnp.einsum("bchk,bhkv->bchv", r_dec, S)
+        # intra-chunk strict-lower scores with channel-wise decay
+        r_t = rc * jnp.exp(jnp.clip(Lm1, -clamp, clamp))
+        k_s = kc * jnp.exp(jnp.clip(-L, -clamp, clamp))
+        scores = jnp.einsum("bthk,bshk->bhts", r_t, k_s)
+        tril = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        scores = jnp.where(tril[None, None], scores, 0.0)
+        y = y + jnp.einsum("bhts,bshv->bthv", scores, vc)
+        # diagonal bonus term
+        diag = jnp.einsum("bthk,bthk->bth", rc, uf[None, None] * kc)
+        y = y + diag[..., None] * vc
+        # state update: S' = exp(L_C) * S + sum_s exp(L_C - L_s) k_s^T v_s
+        Lc = L[:, -1]                            # (B,H,D)
+        k_dec = kc * jnp.exp(jnp.clip(Lc[:, None] - L, -clamp, clamp))
+        S = jnp.exp(jnp.clip(Lc, -clamp, clamp))[..., None] * S + \
+            jnp.einsum("bshk,bshv->bhkv", k_dec, vc)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, lw))
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * C, H, D)[:, :T]
+    return y.astype(r.dtype), state
+
+
+def _group_norm(y: jnp.ndarray, scale, bias, eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head layernorm (group norm with H groups).  y: (B,T,H,D).
+
+    fp32 statistics, compute-dtype apply (no fp32 copy of the full tensor).
+    """
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True).astype(y.dtype)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(y.dtype)
+    yn = (y - mu) * inv
+    B, T, H, D = y.shape
+    yn = yn.reshape(B, T, H * D) * scale.astype(y.dtype) + bias.astype(y.dtype)
+    return yn
+
+
+def apply_time_mix(p, x: jnp.ndarray, cfg: ModelConfig,
+                   rules: Optional[AxisRules], *,
+                   state: Optional[Dict[str, jnp.ndarray]] = None,
+                   impl: str = "scan"
+                   ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full-sequence time-mix.  state carries (wkv, last token) across calls."""
+    B, T, d = x.shape
+    H, D = cfg.num_heads, cfg.resolved_head_dim
+    prev = state["tm_x"][:, None] if state is not None else None
+    wkv0 = (state["wkv"] if state is not None
+            else jnp.zeros((B, H, D, D), jnp.float32))
+    xprev = _token_shift(x, prev)
+    r, k, v, g, log_w = _time_mix_proj(p, x, xprev, cfg)
+    u = p["bonus_u"]
+    if impl == "auto":
+        # per-step scan saves a (B,H,D,D) residual PER TIMESTEP for the
+        # backward pass; the chunked form is mandatory beyond short seqs
+        impl = "scan" if T <= 64 else "chunked"
+    if impl == "chunked":
+        y, wkv = wkv_chunked(r, k, v, log_w, u, wkv0)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        y, wkv = kops.wkv6(r, k, v, log_w, u, wkv0)
+    else:
+        y, wkv = wkv_scan(r, k, v, log_w, u, wkv0)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"])
+    y = y * g.reshape(B, T, d)
+    out = jnp.einsum("btd,de->bte", y, p["wo"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        new_state = {"wkv": wkv, "tm_x": x[:, -1]}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Channel-mix
+# ---------------------------------------------------------------------------
+
+def init_channel_mix(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": zeros_init((d,), ("embed",)),
+        "mu_r": zeros_init((d,), ("embed",)),
+        "wk": dense_init(ks[0], (d, f), ("qkv", "ff")),
+        "wv": dense_init(ks[1], (f, d), ("ff", "qkv")),
+        "wr": dense_init(ks[2], (d, d), ("qkv", "ff")),
+    }
+
+
+def apply_channel_mix(p, x: jnp.ndarray, cfg: ModelConfig,
+                      rules: Optional[AxisRules], *,
+                      state: Optional[Dict[str, jnp.ndarray]] = None
+                      ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    dt = x.dtype
+    prev = state["cm_x"][:, None] if state is not None else None
+    xprev = _token_shift(x, prev)
+    xx = xprev - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    h = jnp.einsum("btd,df->btf", xk, p["wk"].astype(dt))
+    h = jnp.square(jax.nn.relu(h))
+    h = constrain(h, rules, "batch", None, "act_ff")
+    kv = jnp.einsum("btf,fd->btd", h, p["wv"].astype(dt))
+    gate = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(dt)))
+    out = gate * kv
+    new_state = {"cm_x": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int,
+                    dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """Per-layer recurrent state for decode."""
+    H, D = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+        "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+    }

@@ -1,0 +1,150 @@
+"""Optimizers: SGD, SGD+momentum, AdamW — with mixed-precision master weights.
+
+Minimal optax-like API (init/apply pairs of pure functions) so the train step
+stays a single jit-able function.  With ``master_weights=True`` the model
+params stay in bf16 for compute while fp32 masters live in the optimizer
+state (the paper's mixed-precision training, §IV-D, adapted to TPU bf16);
+optimizer state sharding mirrors the parameter sharding (ZeRO-1 style is
+applied by the caller via axis rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Tree], Tree]
+    apply: Callable[[Tree, Tree, Tree], Tuple[Tree, Tree]]
+    name: str
+
+
+def _global_norm(tree: Tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves[1:], start=leaves[0]))
+
+
+def _clip(grads: Tree, max_norm: float) -> Tree:
+    if max_norm <= 0:
+        return grads
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def make_optimizer(cfg: OptimizerConfig, *, master_weights: bool = False
+                   ) -> Optimizer:
+    lr = cfg.lr
+
+    def f32(t):
+        return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+    if cfg.name == "sgd" and cfg.momentum == 0.0:
+        def init(params):
+            s = {"step": jnp.int32(0)}
+            if master_weights:
+                s["master"] = f32(params)
+            return s
+
+        def apply(params, grads, state):
+            grads = _clip(grads, cfg.grad_clip)
+            base = state["master"] if master_weights else params
+            new = jax.tree.map(
+                lambda p, g: p - lr * g.astype(p.dtype), base, grads)
+            ns = {"step": state["step"] + 1}
+            if master_weights:
+                ns["master"] = new
+                new = jax.tree.map(lambda m, p: m.astype(p.dtype), new, params)
+            return new, ns
+
+        return Optimizer(init, apply, "sgd")
+
+    if cfg.name in ("sgd", "sgdm"):
+        mu = cfg.momentum or 0.9
+
+        def init(params):
+            s = {"step": jnp.int32(0), "mom": f32(params)}
+            s["mom"] = jax.tree.map(jnp.zeros_like, s["mom"])
+            if master_weights:
+                s["master"] = f32(params)
+            return s
+
+        def apply(params, grads, state):
+            grads = _clip(grads, cfg.grad_clip)
+            mom = jax.tree.map(
+                lambda m, g: mu * m + g.astype(jnp.float32), state["mom"], grads)
+            base = state["master"] if master_weights else params
+            new = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), base, mom)
+            ns = {"step": state["step"] + 1, "mom": mom}
+            if master_weights:
+                ns["master"] = new
+                new = jax.tree.map(lambda m, p: m.astype(p.dtype), new, params)
+            return new, ns
+
+        return Optimizer(init, apply, "sgdm")
+
+    if cfg.name == "adamw":
+        b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+
+        def init(params):
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            s = {"step": jnp.int32(0), "m": zeros,
+                 "v": jax.tree.map(jnp.zeros_like, zeros)}
+            if master_weights:
+                s["master"] = f32(params)
+            return s
+
+        def apply(params, grads, state):
+            grads = _clip(grads, cfg.grad_clip)
+            step = state["step"] + 1
+            tf = step.astype(jnp.float32)
+            c1 = 1.0 - b1 ** tf
+            c2 = 1.0 - b2 ** tf
+            m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                             state["m"], grads)
+            v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                             * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+            base = state["master"] if master_weights else params
+
+            def upd(p, m_, v_):
+                mhat = m_ / c1
+                vhat = v_ / c2
+                step_ = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+            new = jax.tree.map(upd, base, m, v)
+            ns = {"step": step, "m": m, "v": v}
+            if master_weights:
+                ns["master"] = new
+                new = jax.tree.map(lambda mm, p: mm.astype(p.dtype), new, params)
+            return new, ns
+
+        return Optimizer(init, apply, "adamw")
+
+    raise KeyError(cfg.name)
+
+
+def opt_state_axes(state_shapes: Tree, param_axes: Tree) -> Tree:
+    """Logical axes for the optimizer state: mirror the param axes for
+    param-shaped leaves (mom/m/v/master), scalars unsharded."""
+    def one(path_leaf, _):
+        return None
+
+    # state trees are {"step": scalar, "mom"/"m"/"v"/"master": param-tree}
+    out = {}
+    for k, v in state_shapes.items():
+        if k == "step":
+            out[k] = ()
+        else:
+            out[k] = param_axes
+    return out

@@ -1,0 +1,96 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+    memory term     = HLO_bytes / HBM_bw                 (per chip)
+    collective term = collective_bytes / link_bw         (per chip)
+
+All three numerators come from the per-device partitioned HLO via
+:mod:`repro.roofline.hlo_parse` (with while-loop trip multiplication).
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (brief-specified).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+from repro.roofline.hlo_parse import HloCost, parse_hlo_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    hbm_bytes: float         # capacity per chip
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_bw=50e9, hbm_bytes=16 * 2 ** 30)
+
+
+def model_flops(params: int, tokens: int, *, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (forward-only)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * params * tokens
+
+
+def roofline_terms(cost: HloCost, hw: Hardware = HW_V5E,
+                   *, devices: int = 256) -> Dict[str, float]:
+    compute_t = cost.flops / hw.peak_flops
+    memory_t = cost.bytes / hw.hbm_bw
+    collective_t = cost.collective_bytes / hw.ici_bw
+    dominant = max(
+        ("compute", compute_t), ("memory", memory_t),
+        ("collective", collective_t), key=lambda kv: kv[1])[0]
+    total = max(compute_t, memory_t, collective_t)
+    return {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "dominant": dominant,
+        "bound_s": total,
+        "compute_fraction": compute_t / total if total > 0 else 0.0,
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+    }
+
+
+def analyze_cell(record_path: str, hw: Hardware = HW_V5E) -> Optional[Dict]:
+    """Read one dry-run JSON record + its HLO file; return the full analysis."""
+    with open(record_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok" or "hlo_file" not in rec:
+        return rec
+    hlo_path = rec["hlo_file"]
+    if not os.path.isabs(hlo_path):
+        for base in (os.getcwd(), os.path.dirname(os.path.dirname(record_path))):
+            cand = os.path.join(base, hlo_path)
+            if os.path.exists(cand):
+                hlo_path = cand
+                break
+    with open(hlo_path) as f:
+        text = f.read()
+    cost = parse_hlo_cost(text)
+    terms = roofline_terms(cost, hw, devices=rec.get("devices", 256))
+
+    # MODEL_FLOPS / HLO_FLOPs (useful-compute ratio)
+    shape = rec["shape"]
+    tokens = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+              "decode_32k": 128, "long_500k": 1}[shape]
+    kind = rec.get("kind", "train")
+    n = rec.get("params_active") or rec.get("params")
+    mf = model_flops(n, tokens, kind="train" if kind == "train" else "fwd")
+    per_dev_mf = mf / rec.get("devices", 256)
+    terms["model_flops_per_dev"] = per_dev_mf
+    terms["useful_ratio"] = per_dev_mf / cost.flops if cost.flops else 0.0
+    terms["mfu_at_bound"] = (per_dev_mf / hw.peak_flops) / terms["bound_s"] \
+        if terms["bound_s"] > 0 else 0.0
+    terms["collectives"] = cost.collective_counts
+    terms["collective_bytes_by_kind"] = cost.collective_bytes_by_kind
+    rec["roofline"] = terms
+    return rec

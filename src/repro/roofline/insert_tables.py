@@ -1,0 +1,22 @@
+"""Splice the baseline + optimized roofline tables into EXPERIMENTS.md."""
+import re
+import sys
+
+from repro.roofline.report import collect, to_markdown
+
+
+def main() -> None:
+    base = to_markdown(collect("results/dryrun", "single"))
+    try:
+        opt = to_markdown(collect("results/dryrun_opt", "single"))
+    except Exception as e:
+        opt = f"(optimized sweep incomplete: {e})"
+    text = open("EXPERIMENTS.md").read()
+    text = text.replace("<!-- BASELINE_TABLE -->", base)
+    text = text.replace("<!-- OPT_TABLE -->", opt)
+    open("EXPERIMENTS.md", "w").write(text)
+    print("tables inserted")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Roofline report: the full (arch x shape x mesh) table for EXPERIMENTS.md.
+
+Reads the dry-run JSON records + saved HLO dumps, runs the cost parser,
+derives the three roofline terms + the dominant bottleneck, and emits both a
+markdown table and a JSON artifact (results/roofline.json) for §Perf diffs.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dryrun-dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.roofline.analysis import HW_V5E, analyze_cell
+from repro.launch.dryrun import applicable_shapes
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def collect(dryrun_dir: str, mesh: str = "single") -> List[Dict]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        app = dict(applicable_shapes(arch))
+        for shape in SHAPE_ORDER:
+            if shape not in app:
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "skip(full-attn)"})
+                continue
+            path = os.path.join(dryrun_dir, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(path):
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "missing"})
+                continue
+            rec = analyze_cell(path)
+            rows.append(rec)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | status | compute | memory | collective | "
+           "dominant | useful ratio | MFU@bound | HBM GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('status')} |"
+                       + " - |" * 7)
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.2f} | "
+            f"{t['mfu_at_bound']*100:.1f}% | {hbm:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    rows = collect(args.dryrun_dir, args.mesh)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print(to_markdown(rows))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2, default=str)
+    print(f"\n{len(ok)} analyzed; wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.utils.trees import (
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_axpy,
+    tree_zeros_like,
+    tree_dot,
+    tree_norm,
+    tree_cast,
+    tree_size_bytes,
+)
+
+__all__ = [
+    "tree_add", "tree_sub", "tree_scale", "tree_axpy", "tree_zeros_like",
+    "tree_dot", "tree_norm", "tree_cast", "tree_size_bytes",
+]

@@ -1,0 +1,47 @@
+"""Pytree arithmetic used across the PS algorithms and optimizers."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def tree_add(a: Tree, b: Tree) -> Tree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Tree, b: Tree) -> Tree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a: Tree) -> Tree:
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a: Tree, b: Tree) -> Tree:
+    """s*a + b, elementwise over the tree."""
+    return jax.tree.map(lambda x, y: s * x + y, a, b)
+
+
+def tree_zeros_like(a: Tree) -> Tree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a: Tree, b: Tree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves[1:], start=leaves[0]) if leaves else jnp.float32(0)
+
+
+def tree_norm(a: Tree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(a: Tree, dtype) -> Tree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_size_bytes(a: Tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))

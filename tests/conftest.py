@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,62 @@
+"""Dual binary search + IQR outlier detection (paper §IV-A)."""
+import numpy as np
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.allocator import (
+    Allocation, detect_outliers, dual_binary_search, estimate_k,
+    predicted_time, reallocate,
+)
+
+
+def test_iqr_outliers():
+    times = {f"w{i}": 1.0 + 0.01 * i for i in range(10)}
+    times["straggler"] = 9.0
+    times["racer"] = 0.05
+    out = detect_outliers(times)
+    assert "straggler" in out and "racer" in out
+    assert all(w not in out for w in times if w.startswith("w"))
+
+
+def test_no_outliers_in_uniform_cluster():
+    times = {f"w{i}": 1.0 for i in range(12)}
+    assert detect_outliers(times) == []
+
+
+def test_estimate_k_inverts_eq3():
+    k = 0.035
+    t = predicted_time(k, 1, 640, 16)
+    assert estimate_k(t, 1, 640, 16) == pytest.approx(k)
+
+
+def test_binary_search_lands_near_target():
+    for k in [0.01, 0.03, 0.12]:
+        for target in [0.5, 2.0, 7.7]:
+            a = dual_binary_search(k, target, dss_domain=(16, 60000))
+            t = predicted_time(k, 1, a.dss, a.mbs)
+            # within one mini-batch step of the target
+            assert abs(t - target) <= k + 1e-9, (k, target, a, t)
+
+
+def test_mbs_is_power_of_two_choice():
+    a = dual_binary_search(0.02, 3.0)
+    assert a.mbs in (2, 4, 8, 16, 32, 64, 128, 256)
+    assert a.dss >= a.mbs
+
+
+def test_memory_limit_respected():
+    a = dual_binary_search(0.0001, 100.0, dss_domain=(16, 10 ** 6),
+                           mem_limit_dss=2000)
+    assert a.dss <= 2000
+
+
+def test_reallocate_targets_median():
+    cfg = HermesConfig()
+    times = {"fast": 0.2, "a": 1.0, "b": 1.05, "c": 0.95, "d": 1.0,
+             "slow": 30.0}
+    allocs = {w: Allocation(256, 16) for w in times}
+    new = reallocate(times, allocs, cfg, dss_domain=(16, 60000))
+    assert "slow" in new and "fast" in new
+    # straggler gets LESS data, racer gets MORE
+    assert new["slow"].dss < 256 or new["slow"].mbs > 16
+    assert new["fast"].dss > 256

@@ -1,0 +1,57 @@
+"""Checkpointer: roundtrip, retention, atomicity, async."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, save_tree, restore_tree
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {"params": {"w": jax.random.normal(ks[0], (8, 4)),
+                       "b": jnp.zeros((4,), jnp.bfloat16)},
+            "opt": [jax.random.normal(ks[1], (8, 4)), jnp.int32(7)],
+            "step": jnp.int32(42)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    save_tree(t, str(tmp_path), 3)
+    r, step = restore_tree(t, str(tmp_path))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert r["params"]["b"].dtype == np.asarray(t["params"]["b"]).dtype
+
+
+def test_latest_selected(tmp_path):
+    t = _tree(jax.random.PRNGKey(1))
+    for s in (1, 5, 9):
+        save_tree(jax.tree.map(lambda x: x + s, t), str(tmp_path), s)
+    r, step = restore_tree(t, str(tmp_path))
+    assert step == 9
+
+
+def test_retention_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_write=False)
+    t = _tree(jax.random.PRNGKey(2))
+    for s in range(1, 6):
+        ck.save(t, s)
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_4", "step_5"]
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_write=True)
+    t = _tree(jax.random.PRNGKey(3))
+    ck.save(t, 10)
+    r, step = ck.restore(t)
+    assert step == 10
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_tree({"x": jnp.zeros(1)}, str(tmp_path))

@@ -1,0 +1,123 @@
+"""Sharding rules, compression error feedback, HLO cost parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.config import ParallelConfig
+from repro.configs import get_config
+from repro.dist.sharding import AxisRules, make_rules
+from repro.dist.compression import compress_tree, payload_bytes
+from repro.launch.mesh import arch_rules
+from repro.roofline.hlo_parse import parse_hlo_cost, shape_bytes
+
+
+def test_axis_rules_dedup():
+    r = AxisRules(rules={"a": "model", "b": "model", "c": ("data", "model")})
+    assert r.spec(["a", "b"]) == PS("model", None)
+    assert r.spec(["c", "a"]) == PS(("data", "model"), None)
+    assert r.spec([None, "a"]) == PS(None, "model")
+
+
+def test_arch_rules_divisibility():
+    # llava: 56 heads don't divide 16 -> no head sharding
+    cfg = get_config("llava-next-34b")
+    r = arch_rules(cfg, None, ParallelConfig(), batch=256)
+    assert r.rules["heads"] is None
+    # qwen3: 32 heads divide 16 -> sharded
+    cfg = get_config("qwen3-8b")
+    r = arch_rules(cfg, None, ParallelConfig(), batch=256)
+    assert r.rules["heads"] == "model"
+    # seamless vocab 256206 doesn't divide 16
+    cfg = get_config("seamless-m4t-large-v2")
+    r = arch_rules(cfg, None, ParallelConfig(), batch=256)
+    assert r.rules["vocab"] is None
+    # grok: 8 experts -> TP inside experts instead of EP
+    cfg = get_config("grok-1-314b")
+    r = arch_rules(cfg, None, ParallelConfig(fsdp=True), batch=256)
+    assert r.rules["expert"] is None and r.rules["expert_ff"] == "model"
+    # deepseek: 64 experts -> EP
+    cfg = get_config("deepseek-v2-lite-16b")
+    r = arch_rules(cfg, None, ParallelConfig(), batch=256)
+    assert r.rules["expert"] == "model"
+
+
+def test_batch_rule_drops_small_batches():
+    cfg = get_config("qwen3-8b")
+    r1 = arch_rules(cfg, None, ParallelConfig(), batch=1)   # long_500k
+    assert r1.rules["batch"] is None
+    r2 = arch_rules(cfg, None, ParallelConfig(), batch=256)
+    assert r2.rules["batch"] == ("data",)
+
+
+def test_error_feedback_accumulates_residual():
+    tree = {"g": jnp.linspace(-1, 1, 512)}
+    rec1, err1 = compress_tree(tree, mode="int8")
+    # the residual must equal the quantization error exactly
+    np.testing.assert_allclose(np.asarray(tree["g"] - rec1["g"]),
+                               np.asarray(err1["g"]), atol=1e-7)
+    # feeding the error back shrinks the cumulative bias
+    rec2, err2 = compress_tree(tree, mode="int8", error=err1)
+    two_step = rec1["g"] + rec2["g"]
+    np.testing.assert_allclose(np.asarray(two_step) / 2,
+                               np.asarray(tree["g"]), atol=0.02)
+
+
+def test_payload_bytes_ordering():
+    tree = {"g": jnp.zeros(10000)}
+    assert payload_bytes(tree, "int8") < payload_bytes(tree, "fp16") \
+        < payload_bytes(tree, "none")
+
+
+# ---------------------------------------------------------------------------
+# HLO parser
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,128]{1,0}") == 128 * 128 * 4
+    assert shape_bytes("bf16[2,4]") == 16
+    assert shape_bytes("(s32[], f32[8]{0})") == 4 + 32
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parser_matches_xla_no_loop():
+    def f(x, w):
+        return jnp.tanh(x @ w) @ (x + w)
+    x = jnp.ones((64, 64))
+    c = jax.jit(f).lower(x, x).compile()
+    got = parse_hlo_cost(c.as_text())
+    # parser counts dot/conv FLOPs only; XLA adds elementwise (<1% here)
+    assert got.flops == pytest.approx(c.cost_analysis()["flops"], rel=1e-2)
+
+
+def test_parser_multiplies_scan_tripcount():
+    def f(x, w):
+        def step(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(step, x, None, length=11)
+        return y
+    x = jnp.ones((32, 32))
+    c = jax.jit(f).lower(x, x).compile()
+    got = parse_hlo_cost(c.as_text())
+    assert got.flops == pytest.approx(11 * 2 * 32 ** 3, rel=1e-6)
+
+
+def test_parser_counts_collectives():
+    ndev = jax.device_count()
+    if ndev < 2:
+        pytest.skip("needs >1 device")
+    mesh = jax.make_mesh((ndev,), ("d",))
+    from jax.sharding import NamedSharding
+    s = NamedSharding(mesh, PS("d", None))
+    rep = NamedSharding(mesh, PS())
+
+    @jax.jit
+    def f(x):
+        return jnp.sum(x, axis=0)
+
+    x = jax.ShapeDtypeStruct((ndev * 4, 8), jnp.float32)
+    c = jax.jit(f, in_shardings=s, out_shardings=rep).lower(x).compile()
+    got = parse_hlo_cost(c.as_text())
+    assert sum(got.collective_counts.values()) >= 1
+    assert got.collective_bytes > 0

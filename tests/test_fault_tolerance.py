@@ -1,0 +1,52 @@
+"""Node-failure handling (the large-scale-runnability requirement).
+
+Asynchronous Hermes tolerates mid-run node deaths natively — a dead worker
+simply stops pushing; convergence continues on the survivors.  BSP needs a
+failure-detection timeout and exclusion at the barrier.
+"""
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.allocator import Allocation
+from repro.core.bundles import make_paper_bundle
+from repro.core.simulator import run_framework
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    b, _ = make_paper_bundle("mnist", n=2500, eval_batch=128)
+    return b
+
+
+def test_hermes_survives_node_deaths(bundle):
+    r = run_framework(
+        "hermes", bundle, num_workers=6, target_acc=0.88,
+        max_iterations=500, max_wall=90,
+        hermes_cfg=HermesConfig(alpha=-1.3, beta=0.1, lam=5, eta=bundle.eta),
+        init_alloc=Allocation(128, 16), eval_every=3,
+        failures={"B1ms_0": 0.5, "F2s_v2_0": 1.0})
+    assert r.reached_target, (r.conv_acc, r.sim_time)
+    # the dead workers stopped iterating early
+    assert len(r.worker_iter_times["B1ms_0"]) < \
+        len(r.worker_iter_times["DS2_v2_0"])
+
+
+def test_bsp_excludes_failed_node_and_completes(bundle):
+    ok = run_framework("bsp", bundle, num_workers=6, target_acc=0.88,
+                       max_iterations=300, max_wall=60,
+                       init_alloc=Allocation(128, 16), eval_every=3)
+    failed = run_framework("bsp", bundle, num_workers=6, target_acc=0.88,
+                           max_iterations=300, max_wall=60,
+                           init_alloc=Allocation(128, 16), eval_every=3,
+                           failures={"F2s_v2_1": 1.0})
+    assert failed.reached_target
+    # the detection timeout costs BSP simulated time vs the clean run
+    assert failed.sim_time >= ok.sim_time
+
+
+def test_asp_survives_failure(bundle):
+    r = run_framework("asp", bundle, num_workers=6, target_acc=0.80,
+                      max_iterations=400, max_wall=60,
+                      init_alloc=Allocation(128, 16), eval_every=3,
+                      failures={"B1ms_1": 0.2})
+    assert len(r.worker_iter_times["B1ms_1"]) <= 2  # died almost immediately

@@ -1,0 +1,87 @@
+"""HermesGUP (Algorithm 1): host vs device implementations + invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.gup import (
+    GUPState, gup_init, gup_update, gup_state_jax, gup_gate_jax, zscore,
+)
+
+
+def test_no_push_without_history():
+    cfg = HermesConfig(alpha=-1.3, window=10)
+    st = gup_init(cfg)
+    push, st = gup_update(st, 1.0)
+    assert not push  # queue empty -> z undefined -> no push
+    push, st = gup_update(st, 0.9)
+    assert not push  # still < 2 entries at decision time
+
+
+def test_push_on_significant_drop():
+    cfg = HermesConfig(alpha=-1.3, window=10, lam=1000)
+    st = gup_init(cfg)
+    # noisy plateau (stdev ~0.28): none of these are -1.3 sigma moves
+    for x in [1.0, 0.6, 1.4, 0.8, 1.2, 1.0]:
+        push, st = gup_update(st, x)
+        assert not push, x
+    push, st = gup_update(st, 0.2)  # ~-2.9 sigma: significant improvement
+    assert push
+    assert st.n_iter == 0
+
+
+def test_no_push_on_increase():
+    cfg = HermesConfig(alpha=-1.3, window=10, lam=10**9)
+    st = gup_init(cfg)
+    for x in [1.0, 1.01, 0.99, 1.02]:
+        gup_update(st, x)
+    push, _ = gup_update(st, 5.0)  # big REGRESSION: z >> 0
+    assert not push
+
+
+def test_alpha_decay_after_lambda():
+    cfg = HermesConfig(alpha=-2.0, beta=0.1, lam=3, window=10)
+    st = gup_init(cfg)
+    a0 = st.alpha
+    for x in [1.0, 1.0, 1.0]:  # sigma=0 -> no push, n_iter hits lam
+        gup_update(st, x)
+    assert st.alpha == pytest.approx(a0 + cfg.beta)
+
+
+def test_alpha_clamped_at_max():
+    cfg = HermesConfig(alpha=-0.05, beta=0.1, lam=1, alpha_max=0.0)
+    st = gup_init(cfg)
+    for _ in range(5):
+        gup_update(st, 1.0)
+    assert st.alpha <= cfg.alpha_max + 1e-9
+
+
+def test_queue_window():
+    cfg = HermesConfig(window=4)
+    st = gup_init(cfg)
+    for x in [1, 2, 3, 4, 5, 6]:
+        gup_update(st, float(x))
+    assert list(st.queue) == [3.0, 4.0, 5.0, 6.0]
+
+
+def test_zscore_matches_paper_thresholds():
+    # paper §V-E: alpha=-1.3 <-> ~9.68% tail probability
+    from math import erf
+    for alpha, prob in [(-1.3, 0.0968), (-1.6, 0.0548), (-0.9, 0.184)]:
+        p = 0.5 * (1 + erf(alpha / np.sqrt(2)))
+        assert abs(p - prob) < 0.003
+
+
+def test_host_vs_jax_equivalence():
+    cfg = HermesConfig(alpha=-1.0, beta=0.1, lam=4, window=6)
+    host = gup_init(cfg)
+    dev = gup_state_jax(cfg)
+    rng = np.random.default_rng(1)
+    losses = np.abs(rng.normal(1.0, 0.2, 60)).astype(np.float32)
+    losses[20] = 0.1
+    losses[40] = 0.05
+    for i, x in enumerate(losses):
+        hp, host = gup_update(host, float(x))
+        dp, dev = gup_gate_jax(dev, jnp.float32(x), cfg)
+        assert bool(dp) == hp, f"divergence at iteration {i}"
+        assert abs(float(dev["alpha"]) - host.alpha) < 1e-5

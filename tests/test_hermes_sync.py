@@ -1,0 +1,97 @@
+"""Level-B device Hermes vs host Algorithm 2 equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.loss_sgd import apply_global, loss_weighted_merge
+from repro.dist.hermes_sync import (
+    hermes_merge, hermes_pod_state, hermes_round,
+)
+
+
+def _pods(key, n, shape=(6, 5)):
+    return {"w": jax.random.normal(key, (n,) + shape)}
+
+
+def test_single_gate_reduces_to_algorithm2():
+    """With exactly one gate open, the merge must equal Algorithm 2's
+    model-space form: (W1 w_global + W2 w_local) / (W1 + W2)."""
+    key = jax.random.PRNGKey(0)
+    pods = _pods(key, 3)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 5))}
+    gates = jnp.array([False, True, False])
+    losses = jnp.array([9.9, 0.8, 9.9])
+    L = jnp.float32(1.3)
+    new_pods, new_g, _, any_push = hermes_merge(
+        pods, gates, losses, wg, L)
+    W1, W2 = 1 / 1.3, 1 / 0.8
+    want = (W1 * wg["w"] + W2 * pods["w"][1]) / (W1 + W2)
+    np.testing.assert_allclose(np.asarray(new_g["w"]), np.asarray(want),
+                               atol=1e-5)
+    # the pushing pod refreshes; the others keep local params
+    np.testing.assert_allclose(np.asarray(new_pods["w"][1]),
+                               np.asarray(new_g["w"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_pods["w"][0]),
+                               np.asarray(pods["w"][0]), atol=1e-6)
+    assert bool(any_push)
+
+
+def test_no_gate_is_identity():
+    key = jax.random.PRNGKey(2)
+    pods = _pods(key, 4)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(3), (6, 5))}
+    gates = jnp.zeros((4,), bool)
+    new_pods, new_g, _, any_push = hermes_merge(
+        pods, gates, jnp.ones((4,)), wg, jnp.float32(1.0))
+    assert not bool(any_push)
+    np.testing.assert_allclose(np.asarray(new_g["w"]), np.asarray(wg["w"]))
+    np.testing.assert_allclose(np.asarray(new_pods["w"]),
+                               np.asarray(pods["w"]))
+
+
+def test_round_gates_fire_on_loss_drop():
+    # alpha=-1.5: pod 0's +-1-sigma alternation never crosses the gate
+    cfg = HermesConfig(alpha=-1.5, window=6, lam=100)
+    n = 2
+    pods = _pods(jax.random.PRNGKey(4), n)
+    gst = hermes_pod_state(cfg, n)
+    wg = {"w": jnp.zeros((6, 5))}
+    fired = []
+    for i in range(10):
+        # pod 0: flat losses; pod 1: sudden improvement at i==8
+        losses = jnp.array([1.0 + 0.01 * ((-1) ** i),
+                            1.0 if i < 8 else 0.2], jnp.float32)
+        out = hermes_round(pods, gst, losses, wg, jnp.float32(1.0), cfg)
+        gst = out["gup"]
+        fired.append(np.asarray(out["gates"]))
+    fired = np.stack(fired)
+    assert fired[:, 0].sum() == 0          # pod 0 never fires
+    assert fired[8:, 1].sum() >= 1         # pod 1 fires on its drop
+
+
+def test_compressed_merge_close_to_exact():
+    cfg = HermesConfig(alpha=-0.1, window=4, lam=2, compression="int8")
+    pods = _pods(jax.random.PRNGKey(5), 2)
+    wg = {"w": jnp.zeros((6, 5))}
+    gates = jnp.array([True, True])
+    losses = jnp.array([0.5, 0.5])
+    _, g_exact, _, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.0),
+                                    compression="none")
+    _, g_int8, _, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.0),
+                                   compression="int8")
+    np.testing.assert_allclose(np.asarray(g_int8["w"]),
+                               np.asarray(g_exact["w"]), atol=0.05)
+
+
+def test_kernel_path_matches_jnp_path():
+    pods = _pods(jax.random.PRNGKey(6), 2)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(7), (6, 5))}
+    gates = jnp.array([True, False])
+    losses = jnp.array([0.7, 9.9])
+    _, g1, _, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.1))
+    _, g2, _, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.1),
+                               use_kernel=True)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
+                               atol=1e-5)

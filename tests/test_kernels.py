@@ -1,0 +1,148 @@
+"""Per-kernel allclose vs the ref.py oracles, sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.rwkv6_scan import wkv6_chunked
+from repro.kernels.rglru_scan import rglru_chunked
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,Sq,Skv,D", [
+    (1, 2, 2, 32, 32, 16),
+    (2, 4, 2, 33, 33, 16),   # ragged seq -> padding path
+    (1, 8, 1, 64, 64, 32),   # MQA
+    (2, 4, 4, 16, 48, 8),    # cross-ish (Sq != Skv)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(B, H, K, Sq, Skv, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, Skv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, Skv, D)).astype(dtype)
+    causal = Sq == Skv
+    out = fa_raw(q, k, v, causal=causal, block_q=16, block_k=16,
+                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [8, 33])
+def test_flash_window_vs_ref(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 16))
+    k = jax.random.normal(ks[1], (1, 2, 64, 16))
+    v = jax.random.normal(ks[2], (1, 2, 64, 16))
+    out = fa_raw(q, k, v, causal=True, window=window, block_q=16, block_k=16,
+                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,T,D,chunk", [
+    (1, 2, 32, 16, 8),
+    (2, 3, 50, 16, 16),      # ragged
+    (1, 1, 64, 32, 64),      # single chunk
+])
+def test_wkv6_vs_ref(B, H, T, D, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r = jax.random.normal(ks[0], (B, H, T, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, T, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, T, D)) * 0.5
+    log_w = -jnp.exp(jax.random.normal(ks[3], (B, H, T, D)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (H, D)) * 0.3
+    s0 = jax.random.normal(jax.random.PRNGKey(9), (B, H, D, D)) * 0.1
+    y, sT = wkv6_chunked(r, k, v, log_w, u, s0, chunk=chunk, interpret=True)
+    y2, sT2 = ref.wkv6_ref(r, k, v, log_w, u, s0)
+    np.testing.assert_allclose(y, y2, atol=5e-4)
+    np.testing.assert_allclose(sT, sT2, atol=5e-4)
+
+
+def test_wkv6_strong_decay_stable():
+    """Very fast decay (log_w << 0) must not produce inf/nan (clamping)."""
+    B, H, T, D = 1, 1, 32, 8
+    r = jnp.ones((B, H, T, D)) * 0.1
+    k = jnp.ones((B, H, T, D)) * 0.1
+    v = jnp.ones((B, H, T, D))
+    log_w = jnp.full((B, H, T, D), -50.0)  # decay ~ e^-50
+    u = jnp.zeros((H, D))
+    s0 = jnp.zeros((B, H, D, D))
+    y, sT = wkv6_chunked(r, k, v, log_w, u, s0, chunk=8, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.all(jnp.isfinite(sT)))
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,W,chunk,bw", [
+    (1, 32, 16, 8, 16),
+    (2, 45, 24, 16, 8),      # ragged both dims
+    (1, 128, 64, 128, 64),
+])
+def test_rglru_vs_ref(B, T, W, chunk, bw):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, W))) * 0.3 + 0.7
+    b = jax.random.normal(ks[1], (B, T, W)) * 0.2
+    h0 = jax.random.normal(ks[2], (B, W)) * 0.5
+    h, hT = rglru_chunked(a, b, h0, chunk=chunk, block_w=bw, interpret=True)
+    h2, hT2 = ref.rglru_ref(a, b, h0)
+    np.testing.assert_allclose(h, h2, atol=1e-5)
+    np.testing.assert_allclose(hT, hT2, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 1000, 4096, 70000])
+def test_quantize_roundtrip(n):
+    x = jax.random.normal(jax.random.PRNGKey(4), (n,))
+    q, s = ops.quantize_int8(x)
+    xr = ops.dequantize_int8(q, s, x.shape)
+    # blockwise absmax error bound: scale/2 per element
+    err = jnp.abs(x - xr)
+    bound = jnp.repeat(s[:, 0], 256)[:n] * 0.5 + 1e-7
+    assert bool(jnp.all(err <= bound))
+
+
+def test_quantize_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(5), (513,))
+    q, s = ops.quantize_int8(x)
+    q2, s2 = ref.quantize_int8_ref(x)
+    np.testing.assert_array_equal(np.asarray(q)[:q2.shape[0]], np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s)[:s2.shape[0]], np.asarray(s2),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# loss-weighted update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(16,), (33, 7), (4, 5, 6)])
+@pytest.mark.parametrize("n_pods", [1, 2, 4])
+def test_lwu_vs_ref(shape, n_pods):
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    g = jax.random.normal(ks[0], shape)
+    pods = jax.random.normal(ks[1], (n_pods,) + shape)
+    w2 = jnp.abs(jax.random.normal(ks[2], (n_pods,)))
+    w1 = 0.7
+    denom = w1 + float(jnp.sum(w2))
+    for push in (True, False):
+        out = ops.loss_weighted_update(g, pods, w1, w2, denom, push)
+        want = ref.loss_weighted_update_ref(g, pods, w1, w2, denom, push)
+        np.testing.assert_allclose(out, want, atol=1e-5)
+        if not push:
+            np.testing.assert_allclose(out, g, atol=1e-7)

@@ -1,0 +1,83 @@
+"""Loss-based SGD (Algorithm 2) + the model-merge identity used by Level B."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.loss_sgd import (
+    PSState, ps_init, ps_push, loss_weighted_merge, apply_global,
+)
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 2)
+    return {"a": jax.random.normal(ks[0], (4, 3)) * scale,
+            "b": jax.random.normal(ks[1], (5,)) * scale}
+
+
+def test_first_push_initializes_sigma():
+    key = jax.random.PRNGKey(0)
+    w0 = _tree(key)
+    ps = ps_init(w0, eta=0.1)
+    G = _tree(jax.random.PRNGKey(1))
+    ps2, w1, m = ps_push(ps, G, lambda p: 2.0)
+    assert ps2.initialized and ps2.updates == 1
+    expect = apply_global(w0, 0.1, G)
+    np.testing.assert_allclose(w1["a"], expect["a"], rtol=1e-6)
+    assert ps2.L == 2.0
+
+
+def test_weighting_prefers_lower_loss():
+    """The merged gradient leans toward whichever side has lower test loss."""
+    key = jax.random.PRNGKey(0)
+    w0 = _tree(key)
+    sigma = jax.tree.map(jnp.zeros_like, w0)
+    G = jax.tree.map(jnp.ones_like, w0)
+    near_g = loss_weighted_merge(sigma, G, L=10.0, L_temp=0.1)   # worker much better
+    near_s = loss_weighted_merge(sigma, G, L=0.1, L_temp=10.0)   # global much better
+    assert float(jnp.mean(near_g["a"])) > 0.9
+    assert float(jnp.mean(near_s["a"])) < 0.1
+
+
+def test_merge_is_convex_combination():
+    key = jax.random.PRNGKey(2)
+    sigma = _tree(key)
+    G = _tree(jax.random.PRNGKey(3))
+    merged = loss_weighted_merge(sigma, G, 1.7, 0.6)
+    w1, w2 = 1 / 1.7, 1 / 0.6
+    c1 = w1 / (w1 + w2)
+    for k in ("a", "b"):
+        np.testing.assert_allclose(
+            merged[k], c1 * sigma[k] + (1 - c1) * G[k], rtol=1e-5)
+
+
+def test_model_merge_identity():
+    """w0 - eta*merge(sigma,G) == loss-weighted combo of the MODELS — the
+    identity Level B and the fused kernel rely on (DESIGN.md §hermes_sync)."""
+    key = jax.random.PRNGKey(4)
+    w0 = _tree(key)
+    sigma = _tree(jax.random.PRNGKey(5), 0.5)
+    G = _tree(jax.random.PRNGKey(6), 0.5)
+    eta, L, L_temp = 0.3, 1.3, 0.8
+    merged = loss_weighted_merge(sigma, G, L, L_temp)
+    lhs = apply_global(w0, eta, merged)
+    w_global = apply_global(w0, eta, sigma)
+    w_local = apply_global(w0, eta, G)
+    W1, W2 = 1 / L, 1 / L_temp
+    rhs = jax.tree.map(lambda g, l: (W1 * g + W2 * l) / (W1 + W2),
+                       w_global, w_local)
+    for k in ("a", "b"):
+        np.testing.assert_allclose(lhs[k], rhs[k], rtol=1e-5)
+
+
+def test_algorithm2_sequence():
+    """Full Algorithm 2: sigma accumulates merges; L tracks global evals."""
+    key = jax.random.PRNGKey(7)
+    w0 = _tree(key)
+    ps = ps_init(w0, eta=0.1)
+    evals = iter([1.0, 0.8, 0.7, 0.6, 0.5])
+    eval_fn = lambda p: next(evals)
+    ps, _, _ = ps_push(ps, _tree(jax.random.PRNGKey(8)), eval_fn)
+    assert ps.L == 1.0
+    ps, wg, m = ps_push(ps, _tree(jax.random.PRNGKey(9)), eval_fn)
+    assert m["L_temp"] == 0.8 and ps.L == 0.7 and ps.updates == 2

@@ -1,0 +1,102 @@
+"""Regression tests for the §Perf optimizations (EXPERIMENTS.md log)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import replace
+from repro.configs import get_smoke_config
+from repro.models import init_lm, lm_forward
+from repro.models import moe as M
+from repro.models.lm import _fused_ce
+from repro.models.layers import split_tree
+from repro.models.rglru import lru_scan_chunked, lru_scan_sequential
+
+
+def test_head_padding_preserves_function():
+    """§Perf iter 10: zero-q padded heads must not change outputs."""
+    cfg = replace(get_smoke_config("llava-next-34b"),
+                  num_heads=6, num_kv_heads=2)  # G=3, pads to Gp=4
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": (jnp.arange(24, dtype=jnp.int32).reshape(2, 12) % 50),
+             "frontend_embeds": jnp.ones((2, 4, cfg.d_model), jnp.float32)}
+    lg1 = lm_forward(params, batch, cfg, impl="naive")
+    lg2 = lm_forward(params, batch, replace(cfg, tp_pad_heads=8), impl="naive")
+    np.testing.assert_allclose(np.asarray(lg1, np.float32),
+                               np.asarray(lg2, np.float32), atol=2e-2)
+
+
+def test_grouped_moe_matches_dense():
+    """§Perf iter 2: per-group dispatch must stay exact at full capacity."""
+    cfg = get_smoke_config("grok-1-314b")
+    p, _ = split_tree(M.init_moe(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model)) * 0.5
+    dense = M.moe_dense(p, x, cfg, None)
+    for groups in (1, 2, 4):
+        srt = M.moe_sorted(p, x, cfg, None,
+                           capacity=4 * 16 * cfg.moe.top_k, groups=groups)
+        np.testing.assert_allclose(np.asarray(srt), np.asarray(dense),
+                                   atol=2e-4, err_msg=f"groups={groups}")
+
+
+def test_grouped_moe_nondivisor_falls_back():
+    cfg = get_smoke_config("grok-1-314b")
+    p, _ = split_tree(M.init_moe(cfg, jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, cfg.d_model))
+    out = M.moe_sorted(p, x, cfg, None, groups=7)  # 7 does not divide 6
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("decay", [0.3, 0.95])
+def test_lru_chunked_exact(decay):
+    """§Perf iter 13: chunked closed form matches the sequential oracle,
+    including fast decays (the C=16 clamp guarantee)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jnp.full((2, 200, 12), decay) * (
+        jax.nn.sigmoid(jax.random.normal(ks[0], (2, 200, 12))) * 0.1 + 0.95)
+    b = jax.random.normal(ks[1], (2, 200, 12)) * 0.3
+    h0 = jax.random.normal(ks[2], (2, 12))
+    h1, t1 = lru_scan_sequential(a, b, h0)
+    h2, t2 = lru_scan_chunked(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-4)
+
+
+def test_fused_ce_matches_reference():
+    """§Perf iter 8: fused CE loss + gradient equal the straightforward CE."""
+    k = jax.random.PRNGKey(3)
+    logits = jax.random.normal(k, (2, 7, 13))
+    tgt = jnp.array([[1, 2, 3, -1, 5, 0, 12]] * 2, jnp.int32)
+
+    def ref(lg):
+        mask = (tgt >= 0).astype(jnp.float32)
+        t = jnp.maximum(tgt, 0)
+        lgf = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lgf, -1)
+        ll = jnp.take_along_axis(lgf, t[..., None], -1)[..., 0]
+        return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    np.testing.assert_allclose(float(_fused_ce(logits, tgt)),
+                               float(ref(logits)), rtol=1e-6)
+    g1 = jax.grad(lambda lg: _fused_ce(lg, tgt))(logits)
+    g2 = jax.grad(ref)(logits)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_embed_custom_vjp_grad():
+    """§Perf iter 5: sharded-scatter embed backward equals take-autodiff."""
+    from repro.models.layers import embed, init_embedding
+    from repro.dist.sharding import AxisRules
+    cfg = get_smoke_config("qwen3-8b")
+    p, _ = split_tree(init_embedding(cfg, jax.random.PRNGKey(0)))
+    toks = jnp.array([[1, 2, 3, 1], [0, 1, 5, 5]], jnp.int32)
+    rules = AxisRules(rules={"vocab": None, "embed": None, "batch": None,
+                             "seq": None, "act_embed": None})
+    # force the custom path via a rules object with a (trivial) vocab rule
+    rules2 = AxisRules(rules={**rules.rules, "vocab": None})
+    g1 = jax.grad(lambda p: jnp.sum(
+        embed(p, toks, cfg, None, jnp.float32) ** 2))(p)
+    g2 = jax.grad(lambda p: jnp.sum(
+        jnp.take(p["table"], toks, axis=0) ** 2))(p)
+    np.testing.assert_allclose(np.asarray(g1["table"]),
+                               np.asarray(g2["table"]), atol=1e-5)

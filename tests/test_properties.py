@@ -1,0 +1,104 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.config import HermesConfig
+from repro.core.allocator import (
+    dual_binary_search, detect_outliers, predicted_time,
+)
+from repro.core.gup import gup_init, gup_update
+from repro.core.loss_sgd import loss_weighted_merge
+from repro.dist.compression import quantize_int8, dequantize_int8
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants
+# ---------------------------------------------------------------------------
+
+@given(k=st.floats(1e-4, 1.0), target=st.floats(0.05, 50.0))
+@settings(max_examples=80, deadline=None)
+def test_alloc_valid_and_near_target(k, target):
+    a = dual_binary_search(k, target, dss_domain=(16, 60000))
+    assert a.mbs in (2, 4, 8, 16, 32, 64, 128, 256)
+    assert 16 <= a.dss <= 60000 or a.dss == a.mbs
+    assert a.dss >= a.mbs
+    t = predicted_time(k, 1, a.dss, a.mbs)
+    # never more than one mini-batch step over the target
+    assert t <= target + k + 1e-9
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=4, max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_outliers_subset_and_extremes(times):
+    d = {f"w{i}": t for i, t in enumerate(times)}
+    out = detect_outliers(d)
+    assert set(out) <= set(d)
+    # the cluster median is never an outlier
+    med = sorted(times)[len(times) // 2]
+    med_key = [k for k, v in d.items() if v == med][0]
+    assert med_key not in out
+
+
+# ---------------------------------------------------------------------------
+# GUP invariants
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.01, 10.0), min_size=3, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_gup_alpha_bounded_and_counters_consistent(losses):
+    cfg = HermesConfig(alpha=-1.3, beta=0.1, lam=3)
+    s = gup_init(cfg)
+    pushes = 0
+    for x in losses:
+        p, s = gup_update(s, float(x))
+        pushes += p
+        assert cfg.alpha_min - 1e-9 <= s.alpha <= cfg.alpha_max + 1e-9
+        assert len(s.queue) <= cfg.window
+    assert s.pushes == pushes
+    assert s.iterations == len(losses)
+
+
+@given(st.lists(st.floats(1.0, 1.000001), min_size=5, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_gup_never_pushes_on_constant_loss(losses):
+    cfg = HermesConfig(alpha=-0.5)
+    s = gup_init(cfg)
+    for x in losses:
+        p, s = gup_update(s, 1.0)
+        assert not p  # sigma == 0 -> z undefined -> no push
+
+
+# ---------------------------------------------------------------------------
+# Loss-weighted merge invariants
+# ---------------------------------------------------------------------------
+
+@given(l1=st.floats(0.01, 100.0), l2=st.floats(0.01, 100.0),
+       a=st.floats(-5, 5), b=st.floats(-5, 5))
+@settings(max_examples=80, deadline=None)
+def test_merge_between_operands(l1, l2, a, b):
+    s = {"x": jnp.float32(a)}
+    g = {"x": jnp.float32(b)}
+    m = float(loss_weighted_merge(s, g, l1, l2)["x"])
+    lo, hi = min(a, b), max(a, b)
+    assert lo - 1e-4 <= m <= hi + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Quantization invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 2000), st.floats(1e-3, 1e3))
+@settings(max_examples=40, deadline=None)
+def test_quantize_error_bound(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    q, s = ref.quantize_int8_ref(x)
+    xr = ref.dequantize_int8_ref(q, s, x.shape)
+    err = np.abs(np.asarray(x - xr))
+    per_block_bound = np.repeat(np.asarray(s[:, 0]), 256)[:n] * 0.5 + 1e-7
+    assert np.all(err <= per_block_bound)
