@@ -1,0 +1,17 @@
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test collect quickstart
+
+# tier-1 verify (ROADMAP.md)
+test:
+	python -m pytest -x -q
+
+# Import-graph smoke gate: every test module must collect with zero import
+# errors.  This is the regression class that once shipped a missing
+# `repro.dist` package — cheap enough to run on every commit.
+collect:
+	python -m pytest --collect-only -q
+
+quickstart:
+	python examples/quickstart.py

@@ -1,0 +1,12 @@
+"""Distributed-systems layer: sharding rules, wire compression, Hermes sync.
+
+Three modules, each one lever of the paper's communication stack:
+
+* :mod:`repro.dist.sharding`     — logical-axis -> mesh-axis rule tables and
+  the sharding-constraint helper every model layer calls.
+* :mod:`repro.dist.compression`  — int8/fp16 wire formats with error
+  feedback for the gated push payloads.
+* :mod:`repro.dist.hermes_sync`  — the device-resident Level-B
+  generalization of the paper's Algorithm 1 gate + Algorithm 2 merge.
+"""
+from repro.dist import compression, hermes_sync, sharding  # noqa: F401

@@ -1,0 +1,116 @@
+"""Push-payload wire compression with error feedback (DESIGN.md §compression).
+
+The Hermes merge collective only fires on gate-open rounds, but when it
+fires the payload is a whole model delta — compressing it is the second
+half of the paper's communication story (§IV-D uses fp16; int8 with
+per-256-element absmax scales is our beyond-paper upgrade).
+
+Wire formats (``payload_bytes`` is the single source of truth the
+benchmarks bill against):
+
+* ``"none"``  — fp32 leaves verbatim: 4 bytes/element.
+* ``"fp16"``  — half-precision cast: 2 bytes/element.
+* ``"int8"``  — blockwise int8: 1 byte/element + one fp32 scale per
+  256-element block (matches the Pallas kernel in ``kernels/quantize.py``).
+
+Quantization is lossy, so ``compress_tree`` threads an *error-feedback*
+residual: the caller keeps ``error`` (what the wire dropped last round) and
+adds it back into the next payload, making the compression bias telescope
+to zero over rounds instead of accumulating (Karimireddy et al., 2019).
+
+On TPU the int8 path dispatches to the Pallas kernel; elsewhere a pure-jnp
+twin with the identical block layout runs (the kernel's interpret mode is
+reserved for the kernel unit tests — the jnp twin is much faster on CPU).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+BLOCK = 256  # quantization block; must match kernels/quantize.py
+MODES = ("none", "fp16", "int8")
+
+
+def _use_kernel() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize_int8(x: jnp.ndarray, *, block: int = BLOCK
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: any shape -> (q: (nblocks, block) int8, scales: (nblocks, 1) f32).
+
+    Blockwise absmax: scale = max|x_block| / 127, q = round(x / scale).
+    Same wire format as ``kernels.quantize.quantize_int8`` (which pads the
+    row count up to its grid multiple — both dequantize via flat[:n]).
+    """
+    if _use_kernel():
+        from repro.kernels import ops
+        return ops.quantize_int8(x, block=block)
+    from repro.kernels import ref
+    return ref.quantize_int8_ref(x, block=block)
+
+
+def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, shape
+                    ) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8`; trailing block padding discarded."""
+    if _use_kernel():
+        from repro.kernels import ops
+        return ops.dequantize_int8(q, scales, tuple(shape))
+    from repro.kernels import ref
+    return ref.dequantize_int8_ref(q, scales, shape)
+
+
+def _roundtrip_leaf(x: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """What the receiver reconstructs from one compressed leaf."""
+    if mode == "none":
+        return x
+    if mode == "fp16":
+        return x.astype(jnp.float16).astype(x.dtype)
+    if mode == "int8":
+        q, s = quantize_int8(x)
+        return dequantize_int8(q, s, x.shape).astype(x.dtype)
+    raise ValueError(f"unknown compression mode {mode!r} (want {MODES})")
+
+
+def compress_tree(tree: Tree, mode: str = "int8",
+                  error: Optional[Tree] = None) -> Tuple[Tree, Tree]:
+    """Compress-decompress a payload tree with error feedback.
+
+    Returns ``(reconstructed, new_error)`` where ``reconstructed`` is what
+    crosses the wire after a round trip and ``new_error`` is the residual
+    the sender must fold into its *next* payload:
+
+        eff           = tree + error          (error defaults to zeros)
+        reconstructed = decompress(compress(eff))
+        new_error     = eff - reconstructed   (exact, in fp32)
+    """
+    eff = tree if error is None else jax.tree.map(jnp.add, tree, error)
+    rec = jax.tree.map(lambda x: _roundtrip_leaf(x, mode), eff)
+    err = jax.tree.map(jnp.subtract, eff, rec)
+    return rec, err
+
+
+def payload_bytes(tree: Tree, mode: str = "int8") -> int:
+    """Wire bytes for one push of ``tree`` under ``mode``.
+
+    int8 bills the unpadded int8 elements plus one fp32 scale per
+    256-element block; fp16/none bill 2/4 bytes per element.  Leaf dtypes
+    are ignored — the wire format, not the in-memory dtype, is billed.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown compression mode {mode!r} (want {MODES})")
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(leaf.size)
+        if mode == "none":
+            total += 4 * n
+        elif mode == "fp16":
+            total += 2 * n
+        else:  # int8: payload + per-block scales
+            nblocks = -(-n // BLOCK)
+            total += n + 4 * nblocks
+    return total

@@ -1,0 +1,162 @@
+"""Device-resident Hermes round: gate, loss-weighted merge, refresh.
+
+This is the Level-B generalization (DESIGN.md §hermes_sync) of the paper's
+host-side loop: ``core/gup.py`` (Algorithm 1 z-score gate) and
+``core/loss_sgd.py`` (Algorithm 2 loss-weighted merge) re-expressed as one
+pure-jnp program over *pod-stacked* pytrees, so a whole synchronization
+round jits into a single SPMD step on the (pod, data, model) mesh.
+
+It relies on the model-merge identity (tests/test_loss_sgd.py): because
+every pod's parameters are an affine function of its gradient-sum,
+Algorithm 2's gradient-space merge equals the model-space form
+
+    w_global' = (W1 * w_global + sum_i W2_i * w_i) / (W1 + sum_i W2_i)
+
+with W1 = 1/L(global), W2_i = 1/loss_i, the sum over gate-open pods.  With
+exactly one gate open this is literally Eq. 5-6; with none it is the
+identity (closed rounds ship one scalar, no model bytes).
+
+Gate-open pods *refresh*: they restart local training from the new global
+model, exactly as a paper worker does after a push+pull.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import HermesConfig
+from repro.core.gup import gup_gate_jax, gup_state_jax
+from repro.dist.compression import compress_tree
+
+Tree = Any
+
+_EPS = 1e-12  # loss -> weight guard; matches core/loss_sgd.py
+
+
+def hermes_pod_state(cfg: HermesConfig, n_pods: int) -> Tree:
+    """Pod-stacked device GUP state: every leaf gains a leading (n_pods,)."""
+    base = gup_state_jax(cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), base)
+
+
+def _pod_mask(gates: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape (n,) gates to broadcast against a (n, ...) stacked leaf."""
+    return gates.reshape(gates.shape + (1,) * (leaf.ndim - 1))
+
+
+def _merge_leaf_jnp(g, pods, w1, w2, denom, any_push):
+    """(w1*g + sum_i w2_i*pods_i)/denom, falling back to g on closed rounds.
+
+    Mirrors ``kernels.ref.loss_weighted_update_ref`` / the fused Pallas
+    kernel operation-for-operation so both paths agree to fp32 rounding.
+    """
+    acc = w1 * g.astype(jnp.float32) + jnp.tensordot(
+        w2, pods.astype(jnp.float32), axes=(0, 0))
+    merged = acc / denom
+    return jnp.where(any_push, merged, g.astype(jnp.float32)).astype(g.dtype)
+
+
+def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
+                 w_global: Tree, L: jnp.ndarray, *,
+                 compression: str = "none", error: Optional[Tree] = None,
+                 use_kernel: bool = False
+                 ) -> Tuple[Tree, Tree, Optional[Tree], jnp.ndarray]:
+    """One gated loss-weighted merge over pod-stacked parameters.
+
+    Args:
+      pod_params: pytree whose leaves are (n_pods, ...) stacked local models.
+      gates:      (n_pods,) bool — which pods push this round.
+      losses:     (n_pods,) fp32 eval losses (the paper's L_temp per pod).
+      w_global:   unstacked global-model pytree.
+      L:          scalar eval loss of the current global model.
+      compression: "none" | "fp16" | "int8" wire format for the push
+        deltas (each pushing pod transmits ``w_i - w_global``).
+      error:      per-pod error-feedback residual tree (same structure as
+        ``pod_params``) from the previous round, or None.
+      use_kernel: route the weighted reduction through the fused Pallas
+        merge kernel instead of the jnp form (identical math).
+
+    Returns ``(new_pod_params, new_w_global, new_error, any_push)``.
+    Closed-gate pods keep their local parameters and their pending error;
+    on a fully closed round the global model is returned bit-identical.
+    """
+    gates = gates.astype(bool)
+    any_push = jnp.any(gates)
+    w1 = 1.0 / jnp.maximum(jnp.asarray(L, jnp.float32), _EPS)
+    w2 = jnp.where(gates,
+                   1.0 / jnp.maximum(losses.astype(jnp.float32), _EPS), 0.0)
+    denom = w1 + jnp.sum(w2)
+
+    # What the PS actually receives: gate-open pods ship (w_i - w_global),
+    # compressed, with their accumulated error folded in (error feedback).
+    # Closed pods transmit nothing — they are zero-masked out of every wire
+    # and merge term so a diverged (nonfinite) local replica cannot poison
+    # the global model through its 0-weight contribution (0 * nan = nan).
+    def _gate_zero(leaf):
+        return jnp.where(_pod_mask(gates, leaf), leaf, jnp.zeros_like(leaf))
+
+    if compression != "none":
+        delta = jax.tree.map(
+            lambda p, g: _gate_zero(p - g[None]), pod_params, w_global)
+        err_in = (None if error is None
+                  else jax.tree.map(_gate_zero, error))
+        rec, residual = compress_tree(delta, mode=compression, error=err_in)
+        recv = jax.tree.map(lambda g, d: g[None] + d, w_global, rec)
+        if error is None:
+            new_error = jax.tree.map(_gate_zero, residual)
+        else:
+            new_error = jax.tree.map(
+                lambda r, e: jnp.where(_pod_mask(gates, r), r, e),
+                residual, error)
+    else:
+        recv = jax.tree.map(_gate_zero, pod_params)
+        new_error = error
+
+    if use_kernel:
+        from repro.kernels import ops
+        new_global = jax.tree.map(
+            lambda g, p: ops.loss_weighted_update(g, p, w1, w2, denom,
+                                                  any_push),
+            w_global, recv)
+    else:
+        new_global = jax.tree.map(
+            lambda g, p: _merge_leaf_jnp(g, p, w1, w2, denom, any_push),
+            w_global, recv)
+
+    # refresh: pushing pods restart from the merged global model
+    new_pods = jax.tree.map(
+        lambda p, g: jnp.where(_pod_mask(gates, p), g[None], p),
+        pod_params, new_global)
+    return new_pods, new_global, new_error, any_push
+
+
+def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
+                 w_global: Tree, L: jnp.ndarray, cfg: HermesConfig, *,
+                 error: Optional[Tree] = None,
+                 use_kernel: bool = False) -> Dict[str, Any]:
+    """One full Level-B round: per-pod Algorithm-1 gates, then the merge.
+
+    The gate is the vmapped device twin of ``core.gup.gup_update`` (same
+    z-score, alpha decay, and ring-buffer bookkeeping), so a Level-B run
+    opens its gates on exactly the rounds the Level-A host simulator would.
+
+    Returns a dict: pod_params, w_global, gup, error, gates, any_push.
+    """
+    gates, new_gup = jax.vmap(
+        lambda s, x: gup_gate_jax(s, x, cfg))(gup_state, pod_losses)
+    new_pods, new_global, new_error, any_push = hermes_merge(
+        pod_params, gates, pod_losses, w_global, L,
+        compression=cfg.compression,
+        error=error if cfg.error_feedback else None,
+        use_kernel=use_kernel)
+    return {
+        "pod_params": new_pods,
+        "w_global": new_global,
+        "gup": new_gup,
+        "error": new_error,
+        "gates": gates,
+        "any_push": any_push,
+    }

@@ -1,0 +1,151 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §sharding).
+
+Every parameter leaf is annotated at init with *logical* axis names
+("vocab", "ff", "heads", ...); every activation constraint names logical
+axes too.  An :class:`AxisRules` table maps those names onto physical mesh
+axes, so the entire parallelism policy of a run is one small dict that
+``launch/mesh.py`` derives per architecture (divisibility fallbacks live
+there, not here).
+
+The same logical name may appear several times in one leaf's axes, and two
+different logical names may map to the same mesh axis (e.g. sequence
+parallelism puts "seq" on "model" while "act_ff" also wants "model" inside
+the TP region).  ``spec`` therefore deduplicates: a mesh axis is consumed
+by the first logical axis that claims it, later claims degrade to
+replication — which is always sharding-correct, merely less sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Tree = Any
+
+#: Rule values: a mesh-axis name, a tuple of mesh-axis names, or None
+#: (replicate).  Tuples mean "shard this logical axis over the product of
+#: these mesh axes" (e.g. batch over ("pod", "data")).
+Rule = Any
+
+
+@dataclasses.dataclass
+class AxisRules:
+    """A logical->mesh rule table, optionally bound to a mesh.
+
+    ``rules`` maps logical axis names to mesh axis names (or tuples of
+    them, or None).  ``mesh`` may be None for rule-only introspection
+    (tests, host-side divisibility checks); binding a mesh enables
+    ``sharding`` and ``constrain``.
+    """
+
+    rules: Dict[str, Rule]
+    mesh: Optional[Mesh] = None
+
+    def spec(self, axes: Sequence[Optional[str]]) -> PartitionSpec:
+        """PartitionSpec for one array's logical axes, mesh axes deduped.
+
+        Each entry resolves through ``rules``; a mesh axis already consumed
+        by an earlier entry is dropped from later ones (first claim wins),
+        so specs built from overlapping rules are always GSPMD-legal.
+        """
+        entries = []
+        used: set = set()
+        for name in axes:
+            rule = self.rules.get(name) if name is not None else None
+            if rule is None:
+                entries.append(None)
+                continue
+            members = (rule,) if isinstance(rule, str) else tuple(rule)
+            free = tuple(m for m in members if m not in used)
+            used.update(free)
+            if not free:
+                entries.append(None)
+            elif isinstance(rule, str):
+                entries.append(free[0])
+            else:
+                entries.append(free)
+        return PartitionSpec(*entries)
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
+        if self.mesh is None:
+            raise ValueError("AxisRules has no mesh bound; cannot build a "
+                             "NamedSharding (use .spec for mesh-free specs)")
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+#: Logical axes every model/launch layer may name.  make_rules seeds them
+#: all so `rules.rules.get(...)` introspection (layers.py, steps.py) sees an
+#: explicit None instead of a missing key.
+_LOGICAL_AXES = (
+    # parameter axes
+    "layers", "embed", "qkv", "ff", "vocab", "heads", "kv_heads",
+    "expert", "expert_ff", "lru",
+    # activation axes
+    "batch", "seq", "act_embed", "act_ff", "act_heads", "act_kv",
+    "act_vocab", "cache_seq", "moe_group",
+)
+
+
+def make_rules(mesh: Optional[Mesh], *, fsdp: bool = False,
+               sequence_parallel: bool = False, multi_pod: bool = False,
+               extra: Optional[Dict[str, Rule]] = None) -> AxisRules:
+    """Base rule table for the (data, model[, pod]) production mesh.
+
+    The base is conservative — everything replicated except:
+
+    * ``sequence_parallel`` puts layer-boundary "seq" on "model" (the TP
+      region is redundant over "model", so slicing seq there is free);
+    * ``fsdp`` puts the non-TP parameter dims ("embed", "qkv") on "data"
+      (ZeRO-3 weight sharding over the idle data axis).
+
+    ``extra`` (the per-architecture divisibility-checked rules from
+    ``launch/mesh.arch_rules``) overrides the base entry-by-entry.
+    ``multi_pod`` is accepted for signature symmetry: pod-axis placement is
+    entirely decided by the caller's "batch" rule, since pods hold model
+    *replicas*, never model shards.
+    """
+    del multi_pod
+    rules: Dict[str, Rule] = {name: None for name in _LOGICAL_AXES}
+    if sequence_parallel:
+        rules["seq"] = "model"
+    if fsdp:
+        rules["embed"] = "data"
+        rules["qkv"] = "data"
+    if extra:
+        rules.update(extra)
+    return AxisRules(rules=rules, mesh=mesh)
+
+
+def constrain(x: jax.Array, rules: Optional[AxisRules],
+              *axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names; no-op un-meshed.
+
+    Model layers call this unconditionally; with ``rules=None`` (unit
+    tests, single-device runs) or a mesh-free rule table it is the
+    identity, so the same model code runs everywhere.
+    """
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple)
+
+
+def param_sharding_tree(axes_tree: Tree, rules: AxisRules) -> Tree:
+    """Map a tree of logical-axes tuples to a tree of shardings.
+
+    ``axes_tree`` is the static twin of a parameter tree (from
+    ``models.layers.split_tree``): each leaf is a tuple of logical axis
+    names.  With a mesh bound the result leaves are ``NamedSharding``;
+    without one they are bare ``PartitionSpec``s (useful for dry
+    inspection).
+    """
+    if rules.mesh is None:
+        return jax.tree.map(lambda a: rules.spec(a), axes_tree,
+                            is_leaf=_is_axes_leaf)
+    return jax.tree.map(lambda a: rules.sharding(a), axes_tree,
+                        is_leaf=_is_axes_leaf)

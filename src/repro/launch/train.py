@@ -60,8 +60,12 @@ def _preset(name: str) -> ModelConfig:
     return get_smoke_config(name)
 
 
-def make_batches(tokens: np.ndarray, batch: int, seq: int, rng) -> Any:
+def make_batches(tokens: np.ndarray, batch: int, seq: int, rng,
+                 skip: int = 0) -> Any:
     n = (len(tokens) - 1) // seq
+    # fast-forward the index stream without materializing skipped batches
+    for _ in range(skip):
+        rng.integers(0, n, batch)
     while True:
         idx = rng.integers(0, n, batch)
         x = np.stack([tokens[i * seq:(i + 1) * seq] for i in idx])
@@ -75,7 +79,6 @@ def train_single(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                  seed: int = 0) -> Dict:
     rng = np.random.default_rng(seed)
     tokens = make_lm_dataset(batch * seq * 40 + 1, cfg.vocab_size, seed=seed)
-    batches = make_batches(tokens, batch, seq, rng)
     optimizer = make_optimizer(opt_cfg)
     params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
     state = {"params": params, "opt": optimizer.init(params),
@@ -88,6 +91,9 @@ def train_single(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
             print(f"restored from step {start_step}")
         except FileNotFoundError:
             pass
+    # resume the data stream, don't replay already-consumed batches
+    batches = make_batches(tokens, batch, seq, rng,
+                           skip=min(start_step, steps))
 
     @jax.jit
     def step_fn(state, batch):
@@ -110,8 +116,11 @@ def train_single(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     if ck:
         ck.save(state, steps)
         ck.wait()
-    return {"final_loss": float(np.mean(losses[-10:])),
-            "first_loss": losses[0], "steps": steps}
+    # a restore at/after `steps` runs zero iterations; report nan, don't crash
+    return {"final_loss": float(np.mean(losses[-10:])) if losses
+            else float("nan"),
+            "first_loss": losses[0] if losses else float("nan"),
+            "steps": steps}
 
 
 def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,

@@ -102,3 +102,52 @@ def test_quantize_error_bound(n, scale):
     err = np.abs(np.asarray(x - xr))
     per_block_bound = np.repeat(np.asarray(s[:, 0]), 256)[:n] * 0.5 + 1e-7
     assert np.all(err <= per_block_bound)
+
+
+@given(st.integers(1, 3000), st.floats(1e-3, 1e3))
+@settings(max_examples=40, deadline=None)
+def test_dist_quantize_roundtrip_bounded(n, scale):
+    """dist.compression round-trip error <= half an int8 step per block."""
+    rng = np.random.default_rng(n + 7)
+    x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    q, s = quantize_int8(x)
+    xr = dequantize_int8(q, s, x.shape)
+    err = np.abs(np.asarray(x - xr))
+    bound = np.repeat(np.asarray(s[:, 0]), 256)[:n] * 0.5 + 1e-7
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert np.all(err <= bound)
+
+
+@given(st.integers(1, 5000))
+@settings(max_examples=40, deadline=None)
+def test_payload_bytes_matches_int8_wire_format(n):
+    """int8 billing = 1 byte/element + one fp32 scale per 256-block, and the
+    ordering int8 < fp16 < none holds for any payload > 8 elements."""
+    from repro.dist.compression import compress_tree, payload_bytes
+    tree = {"g": jnp.zeros((n,), jnp.float32)}
+    nblocks = -(-n // 256)
+    assert payload_bytes(tree, "int8") == n + 4 * nblocks
+    assert payload_bytes(tree, "fp16") == 2 * n
+    assert payload_bytes(tree, "none") == 4 * n
+    if n > 8:  # below ~8 elements the per-block scale dominates
+        assert payload_bytes(tree, "int8") < payload_bytes(tree, "fp16") \
+            < payload_bytes(tree, "none")
+
+
+@given(st.integers(2, 600), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_error_feedback_telescopes(n, seed):
+    """Summing k error-fed reconstructions recovers k*x up to one final
+    residual — the telescoping identity error feedback exists for."""
+    from repro.dist.compression import compress_tree
+    rng = np.random.default_rng(seed)
+    x = {"g": jnp.asarray(rng.normal(0, 1, n), jnp.float32)}
+    err = None
+    acc = np.zeros(n, np.float32)
+    k = 4
+    for _ in range(k):
+        rec, err = compress_tree(x, mode="int8", error=err)
+        acc = acc + np.asarray(rec["g"])
+    # sum of what crossed the wire = k*x - final residual (exact identity)
+    np.testing.assert_allclose(acc, k * np.asarray(x["g"])
+                               - np.asarray(err["g"]), atol=1e-4)
