@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test collect quickstart
+.PHONY: test collect quickstart bench-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -15,3 +15,10 @@ collect:
 
 quickstart:
 	python examples/quickstart.py
+
+# Billing-regression gate: asserts int4 < int8 < fp16 wire bytes against a
+# real parameter tree and drives a tiny int4 (stochastic-rounding) Hermes
+# run through the compressed push path.  A payload_bytes regression fails
+# this before it can skew the paper's §V-B communication numbers.
+bench-smoke:
+	python benchmarks/comm_overhead.py --smoke

@@ -2,15 +2,28 @@
 
 Compares Hermes vs SSP API calls and bytes at a matched accuracy target, and
 breaks calls down by kind (push/pull/data/telemetry).
+
+Beyond the paper: ``format_study`` runs the same Hermes workload once per
+registered wire format (fp16 / int8 / int4+stochastic-rounding, all with
+error feedback) so the compression upgrades are justified by a convergence
+study, not just a byte count — the pushes really are quantized via
+``dist.compression.compress_tree`` before the PS merges them.
+
+``--smoke`` (the Makefile ``bench-smoke`` gate) asserts the billing
+ordering int4 < int8 < fp16 < none on a real parameter tree and runs a tiny
+int4 study end-to-end, so a billing regression cannot land silently.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Sequence
+
+import jax
 
 from repro.config import HermesConfig
 from repro.core.allocator import Allocation
 from repro.core.bundles import make_paper_bundle
 from repro.core.simulator import run_framework
+from repro.dist.compression import payload_bytes
 
 
 def run(*, fast: bool = False) -> Dict:
@@ -39,6 +52,79 @@ def run(*, fast: bool = False) -> Dict:
     }
 
 
+def format_study(*, fast: bool = False,
+                 formats: Sequence[str] = ("none", "fp16", "int8", "int4"),
+                 ) -> Dict:
+    """Hermes convergence + wire bytes per registered wire format."""
+    bundle, _ = make_paper_bundle("mnist", n=2500 if fast else 6000,
+                                  eval_batch=128)
+    kw = dict(num_workers=6 if fast else 12, target_acc=0.85,
+              max_iterations=400 if fast else 2500,
+              max_wall=60 if fast else 300,
+              init_alloc=Allocation(128, 16), eval_every=3, seed=0)
+    out: Dict[str, Dict] = {}
+    for mode in formats:
+        r = run_framework(
+            "hermes", bundle,
+            hermes_cfg=HermesConfig(alpha=-1.3, beta=0.1, lam=5,
+                                    eta=bundle.eta, compression=mode), **kw)
+        out[mode] = {
+            "reached_target": r.reached_target,
+            "conv_acc": round(r.conv_acc, 4),
+            "sim_time_s": round(r.sim_time, 1),
+            "push_mbytes": round(r.bytes_by_kind.get("push", 0.0) / 1e6, 2),
+            "total_mbytes": round(r.bytes_transferred / 1e6, 2),
+            "api_calls": r.api_calls,
+            "ps_updates": r.ps_updates,
+        }
+    return out
+
+
+def smoke() -> Dict:
+    """Billing-regression gate (Makefile ``bench-smoke``).
+
+    1. int4 < int8 < fp16 < none wire bytes on a real parameter tree —
+       straight from the registry's ``payload_bytes``, the same per-leaf
+       function the simulator bills pushes with.
+    2. A tiny int4 Hermes run end-to-end (stochastic rounding + error
+       feedback through the simulator's compressed push path).
+    """
+    bundle, _ = make_paper_bundle("mnist", n=512, eval_batch=64)
+    params = bundle.init(jax.random.PRNGKey(0))
+    bytes_by_mode = {m: payload_bytes(params, m)
+                     for m in ("none", "fp16", "int8", "int4")}
+    assert (bytes_by_mode["int4"] < bytes_by_mode["int8"]
+            < bytes_by_mode["fp16"] < bytes_by_mode["none"]), bytes_by_mode
+    r = run_framework(
+        "hermes", bundle, num_workers=4, target_acc=0.99,
+        max_iterations=60, max_wall=30, eval_every=2, seed=0,
+        init_alloc=Allocation(64, 16),
+        hermes_cfg=HermesConfig(alpha=-0.5, beta=0.1, lam=3,
+                                eta=bundle.eta, compression="int4"))
+    assert r.iterations > 0 and r.bytes_transferred > 0
+    return {
+        "payload_bytes": bytes_by_mode,
+        "int4_run": {"iterations": r.iterations,
+                     "pushes": r.calls_by_kind.get("push", 0),
+                     "mbytes": round(r.bytes_transferred / 1e6, 3)},
+        "ok": True,
+    }
+
+
 if __name__ == "__main__":
+    import argparse
     import json
-    print(json.dumps(run(), indent=2))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="billing-regression gate (fast)")
+    ap.add_argument("--formats", action="store_true",
+                    help="per-wire-format convergence study")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        print(json.dumps(smoke(), indent=2))
+    elif args.formats:
+        print(json.dumps(format_study(fast=args.fast), indent=2))
+    else:
+        print(json.dumps(run(fast=args.fast), indent=2))

@@ -258,9 +258,26 @@ class HermesConfig:
     iqr_k: float = 1.5
     mbs_choices: Tuple[int, ...] = (2, 4, 8, 16, 32, 64, 128, 256)
     target: str = "median"  # target statistic for the dual binary search
-    # compression (§IV-D; int8 is our beyond-paper upgrade of fp16)
-    compression: str = "int8"  # none | fp16 | int8
+    # compression (§IV-D; int8/int4 are our beyond-paper upgrades of fp16).
+    # Any name in the repro.dist.wire registry is valid (see validate()).
+    compression: str = "int8"
     error_feedback: bool = True
+    # Pallas-vs-jnp dispatch for the Level-B merge (hermes_round's
+    # use_kernel resolution): "auto" probes the backend (kernels on TPU),
+    # "on"/"off" force it.  The REPRO_WIRE_KERNEL env var overrides this —
+    # and also governs the config-free flat quantize helpers — so CPU CI
+    # can exercise the kernel path in interpret mode.
+    kernel_dispatch: str = "auto"  # auto | on | off
+
+    def validate(self) -> None:
+        # lazy import: repro.dist imports this module at load time
+        from repro.dist.wire import available_formats
+        assert self.compression in available_formats(), (
+            f"compression {self.compression!r} not registered "
+            f"(want one of {available_formats()})")
+        assert self.kernel_dispatch in ("auto", "on", "off"), \
+            self.kernel_dispatch
+        assert self.window >= 1 and self.lam >= 1
 
 
 @dataclass(frozen=True)
@@ -287,6 +304,7 @@ class RunConfig:
     def validate(self) -> None:
         self.model.validate()
         self.shape.validate()
+        self.hermes.validate()
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2, default=str)

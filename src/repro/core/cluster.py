@@ -80,16 +80,19 @@ def default_cluster(num_workers: int = 12, *, seed: int = 0,
 
 @dataclasses.dataclass
 class CommModel:
+    """Latency + bandwidth cost of one PS<->worker transfer.
+
+    Callers pass the byte count that actually crosses the wire: compressed
+    pushes are billed per leaf through the wire registry's
+    ``payload_bytes`` (see ``simulator._Env.push_wire_bytes``), pulls ship
+    the exact uncompressed model.
+    """
+
     latency: float = 0.04          # seconds per message
     bandwidth: float = 25e6        # bytes/second PS<->worker
-    compression: str = "none"      # none | fp16 | int8
 
-    def payload_factor(self) -> float:
-        return {"none": 1.0, "fp16": 0.5, "int8": 0.25}[self.compression]
-
-    def time(self, nbytes: float, compressed: bool = False) -> float:
-        f = self.payload_factor() if compressed else 1.0
-        return self.latency + (nbytes * f) / self.bandwidth
+    def time(self, nbytes: float) -> float:
+        return self.latency + nbytes / self.bandwidth
 
 
 class Meter:
@@ -99,10 +102,12 @@ class Meter:
         self.api_calls: Dict[str, int] = {}
         self.bytes: float = 0.0
         self.calls_by_kind: Dict[str, int] = {}
+        self.bytes_by_kind: Dict[str, float] = {}
 
     def call(self, worker: str, kind: str, nbytes: float = 0.0, n: int = 1):
         self.api_calls[worker] = self.api_calls.get(worker, 0) + n
         self.calls_by_kind[kind] = self.calls_by_kind.get(kind, 0) + n
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + nbytes
         self.bytes += nbytes
 
     @property

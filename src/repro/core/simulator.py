@@ -33,6 +33,7 @@ from repro.core.cluster import (
 )
 from repro.core.gup import gup_update
 from repro.core.loss_sgd import ps_init, ps_push
+from repro.dist.compression import compress_tree, payload_bytes
 from repro.data.synthetic import iid_partition, dirichlet_partition
 
 Tree = Any
@@ -56,6 +57,7 @@ class RunResult:
     gup_trace: List[Tuple[float, str, float, bool]]  # (t, worker, loss, push)
     alloc_trace: List[Tuple[float, str, int, int]]   # (t, worker, dss, mbs)
     calls_by_kind: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
 
     def wi_table(self) -> Dict[str, float]:
         return {}
@@ -69,12 +71,13 @@ class _Env:
                  init_alloc: Allocation, noniid: bool,
                  compression: str = "none"):
         self.bundle = bundle
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         key = jax.random.PRNGKey(seed)
         self.params0 = bundle.init(key)
         self.step_fn = _make_step(bundle)
         self.loss_j, self.acc_j = _make_eval(bundle)
-        self.comm = CommModel(compression=compression)
+        self.comm = CommModel()
         self.meter = Meter()
         self.specs = default_cluster(num_workers, seed=seed)
         n_train = len(next(iter(bundle.train_data.values())))
@@ -102,6 +105,12 @@ class _Env:
         self.eval_batch = {k: jnp.asarray(v[sel]) for k, v in te.items()}
         self.test_full = {k: jnp.asarray(v) for k, v in te.items()}
         self.params_bytes = bundle.nbytes(self.params0)
+        # per-leaf registry billing for one compressed push of the model
+        # delta — block padding and per-leaf scale counts included, so
+        # Level A bills exactly what the wire registry says
+        self.push_wire_bytes = (payload_bytes(self.params0, compression)
+                                if compression != "none"
+                                else self.params_bytes)
         self.failures: Dict[str, float] = {}
 
     def _sample_bytes(self) -> float:
@@ -451,6 +460,11 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
     n_train = len(next(iter(env.bundle.train_data.values())))
     rng = env.rng
     w_global = env.params0
+    comp_err: Dict[int, Tree] = {}   # per-worker error-feedback residual
+    # stochastic-format dither stream; seed-derived so replicate runs with
+    # different seeds draw independent quantization noise
+    comp_key = jax.random.PRNGKey(env.seed ^ 0x51ED)
+    comp_pushes = 0
 
     for i, w in enumerate(env.workers):
         d = w.sim_iteration_time(eval_n)
@@ -476,14 +490,29 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
         if push:
             # G measured from w0 (Algorithm 2's Worker-SGD accumulation)
             G = jax.tree.map(lambda w0_, wl: (w0_ - wl) / eta, ps.w0, w.params)
-            env.meter.call(w.spec.name, "push", env.params_bytes, n=1)
-            arrive = sim_t + env.comm.time(env.params_bytes, compressed=True)
+            # The wire applies the configured format to the push: the PS
+            # merges the receiver-side reconstruction and the worker carries
+            # the dropped residual forward (error feedback) — the same
+            # compress_tree semantics as the Level-B merge, so Level A and
+            # Level B reconstruct identically.  The push bills the per-leaf
+            # registry payload_bytes; the pull ships (and bills) the exact
+            # uncompressed global model, matching what refresh() applies.
+            if hcfg.compression != "none":
+                G, residual = compress_tree(
+                    G, hcfg.compression,
+                    error=comp_err.get(i) if hcfg.error_feedback else None,
+                    rng=jax.random.fold_in(comp_key, comp_pushes))
+                if hcfg.error_feedback:
+                    comp_err[i] = residual
+                comp_pushes += 1
+            env.meter.call(w.spec.name, "push", env.push_wire_bytes, n=1)
+            arrive = sim_t + env.comm.time(env.push_wire_bytes)
             start = max(arrive, ps_busy_until)
             ps, w_global, _m = ps_push(ps, G, ps_eval)
             ps_time = 0.004 * _m["evals"] * max(1.0, eval_n / 64)
             ps_busy_until = start + ps_time
             env.meter.call(w.spec.name, "pull", env.params_bytes)
-            back = ps_busy_until + env.comm.time(env.params_bytes, compressed=True)
+            back = ps_busy_until + env.comm.time(env.params_bytes)
             w.refresh(w_global)
             w.mom = jax.tree.map(jnp.zeros_like, w.mom)
             next_start = back
@@ -556,4 +585,5 @@ def _result(name: str, env: _Env, sim_t: float, t0: float, acc_best: float,
         gup_trace=gup_trace,
         alloc_trace=alloc_trace,
         calls_by_kind=dict(env.meter.calls_by_kind),
+        bytes_by_kind=dict(env.meter.bytes_by_kind),
     )

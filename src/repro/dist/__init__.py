@@ -1,12 +1,15 @@
 """Distributed-systems layer: sharding rules, wire compression, Hermes sync.
 
-Three modules, each one lever of the paper's communication stack:
+Four modules, each one lever of the paper's communication stack:
 
 * :mod:`repro.dist.sharding`     — logical-axis -> mesh-axis rule tables and
   the sharding-constraint helper every model layer calls.
-* :mod:`repro.dist.compression`  — int8/fp16 wire formats with error
-  feedback for the gated push payloads.
+* :mod:`repro.dist.wire`         — the pluggable WireFormat registry
+  (none/fp16/int8/int4+stochastic-rounding) with shard-local blocked
+  layouts and fused-merge hooks.
+* :mod:`repro.dist.compression`  — pytree-level encode/compress with error
+  feedback for the gated push payloads, billing, kernel dispatch policy.
 * :mod:`repro.dist.hermes_sync`  — the device-resident Level-B
   generalization of the paper's Algorithm 1 gate + Algorithm 2 merge.
 """
-from repro.dist import compression, hermes_sync, sharding  # noqa: F401
+from repro.dist import compression, hermes_sync, sharding, wire  # noqa: F401

@@ -1,51 +1,90 @@
-"""Push-payload wire compression with error feedback (DESIGN.md §compression).
+"""Tree-level push-payload compression with error feedback (DESIGN.md §compression).
 
 The Hermes merge collective only fires on gate-open rounds, but when it
 fires the payload is a whole model delta — compressing it is the second
-half of the paper's communication story (§IV-D uses fp16; int8 with
-per-256-element absmax scales is our beyond-paper upgrade).
+half of the paper's communication story (§IV-D uses fp16; blocked int8 and
+int4+stochastic-rounding are our beyond-paper upgrades).
 
-Wire formats (``payload_bytes`` is the single source of truth the
-benchmarks bill against):
+The per-leaf wire contract lives in the :mod:`repro.dist.wire` registry
+(``WireFormat``: encode / decode / payload_bytes / optional fused-merge
+hook); this module provides the pytree-level operations on top of it:
 
-* ``"none"``  — fp32 leaves verbatim: 4 bytes/element.
-* ``"fp16"``  — half-precision cast: 2 bytes/element.
-* ``"int8"``  — blockwise int8: 1 byte/element + one fp32 scale per
-  256-element block (matches the Pallas kernel in ``kernels/quantize.py``).
+* :func:`encode_tree` / :func:`compress_tree` — encode a payload tree with
+  an *error-feedback* residual: the caller keeps ``error`` (what the wire
+  dropped last round) and adds it back into the next payload, making the
+  compression bias telescope to zero over rounds instead of accumulating
+  (Karimireddy et al., 2019).
+* :func:`payload_bytes` — the single per-leaf billing function the
+  simulator and benchmarks use.
+* :func:`resolve_kernel_dispatch` — kernel-vs-jnp dispatch policy,
+  overridable via ``HermesConfig.kernel_dispatch`` or the
+  ``REPRO_WIRE_KERNEL`` env var so CPU CI can exercise the Pallas kernel
+  path in interpret mode.
 
-Quantization is lossy, so ``compress_tree`` threads an *error-feedback*
-residual: the caller keeps ``error`` (what the wire dropped last round) and
-adds it back into the next payload, making the compression bias telescope
-to zero over rounds instead of accumulating (Karimireddy et al., 2019).
-
-On TPU the int8 path dispatches to the Pallas kernel; elsewhere a pure-jnp
-twin with the identical block layout runs (the kernel's interpret mode is
-reserved for the kernel unit tests — the jnp twin is much faster on CPU).
+Blocked formats are shard-local (blocks tile the last axis only; leading
+axes — including the pod axis of a stacked delta — are untouched), so the
+compress step inserts no collectives on a sharded mesh.  The flat
+``quantize_int8`` / ``dequantize_int8`` pair below keeps the original
+whole-array layout of ``kernels/quantize.py`` for callers that want it.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import os
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.dist.wire import (  # noqa: F401  (re-exported API)
+    BLOCK, WireFormat, available_formats, get_format, register,
+)
+
 Tree = Any
 
-BLOCK = 256  # quantization block; must match kernels/quantize.py
-MODES = ("none", "fp16", "int8")
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch policy
+# ---------------------------------------------------------------------------
+
+def resolve_kernel_dispatch(policy: str = "auto") -> bool:
+    """Should quantize/merge route through the Pallas kernels?
+
+    Priority: ``REPRO_WIRE_KERNEL`` env var (``1/on`` forces the kernel
+    path — interpret mode off-TPU — ``0/off`` forces jnp) > the config
+    policy (``"on"`` / ``"off"``) > backend probe (``"auto"``: kernels on
+    TPU, jnp twins elsewhere).
+    """
+    if policy not in ("auto", "on", "off"):
+        raise ValueError(
+            f"kernel_dispatch policy {policy!r} (want auto|on|off)")
+    env = os.environ.get("REPRO_WIRE_KERNEL", "").strip().lower()
+    if env in ("1", "on", "true", "yes"):
+        return True
+    if env in ("0", "off", "false", "no"):
+        return False
+    if policy == "on":
+        return True
+    if policy == "off":
+        return False
+    return jax.default_backend() == "tpu"
 
 
 def _use_kernel() -> bool:
-    return jax.default_backend() == "tpu"
+    return resolve_kernel_dispatch()
 
+
+# ---------------------------------------------------------------------------
+# Flat int8 layout (kernels/quantize.py compatible)
+# ---------------------------------------------------------------------------
 
 def quantize_int8(x: jnp.ndarray, *, block: int = BLOCK
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: any shape -> (q: (nblocks, block) int8, scales: (nblocks, 1) f32).
 
-    Blockwise absmax: scale = max|x_block| / 127, q = round(x / scale).
-    Same wire format as ``kernels.quantize.quantize_int8`` (which pads the
-    row count up to its grid multiple — both dequantize via flat[:n]).
+    Blockwise absmax over the *flattened* array: scale = max|x_block| / 127,
+    q = round(x / scale).  Same wire format as ``kernels.quantize``
+    (which pads the row count up to its grid multiple — both dequantize via
+    flat[:n]).  Prefer the shard-local tree API for sharded payloads.
     """
     if _use_kernel():
         from repro.kernels import ops
@@ -64,53 +103,74 @@ def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, shape
     return ref.dequantize_int8_ref(q, scales, shape)
 
 
-def _roundtrip_leaf(x: jnp.ndarray, mode: str) -> jnp.ndarray:
-    """What the receiver reconstructs from one compressed leaf."""
-    if mode == "none":
-        return x
-    if mode == "fp16":
-        return x.astype(jnp.float16).astype(x.dtype)
-    if mode == "int8":
-        q, s = quantize_int8(x)
-        return dequantize_int8(q, s, x.shape).astype(x.dtype)
-    raise ValueError(f"unknown compression mode {mode!r} (want {MODES})")
+# ---------------------------------------------------------------------------
+# Tree-level encode / error feedback
+# ---------------------------------------------------------------------------
+
+def encode_tree(tree: Tree, mode: str = "int8", error: Optional[Tree] = None,
+                rng=None, with_residual: bool = True
+                ) -> Tuple[Tree, Optional[Tree], Optional[Tree]]:
+    """Encode a payload tree; returns ``(payloads, reconstructed, new_error)``.
+
+        eff           = tree + error          (error defaults to zeros)
+        payloads      = encode(eff)           per leaf, shard-local
+        reconstructed = decode(payloads)      what the receiver sees
+        new_error     = eff - reconstructed   (exact, in the leaf dtype)
+
+    ``payloads`` mirrors ``tree``'s structure with one payload dict per
+    leaf (recover the leaves with ``treedef.flatten_up_to``).  ``rng`` seeds
+    stochastic formats (int4); each leaf gets an independent fold.
+
+    ``with_residual=False`` skips the decode entirely and returns
+    ``(payloads, None, None)`` — the fused-merge path uses this when no
+    error-feedback state is tracked, so no reconstructed fp32 tree is ever
+    built, even eagerly.
+    """
+    fmt = get_format(mode)
+    eff = tree if error is None else jax.tree.map(jnp.add, tree, error)
+    leaves, treedef = jax.tree.flatten(eff)
+    if fmt.stochastic and rng is None:
+        rng = jax.random.PRNGKey(0)
+    payloads, rec, err = [], [], []
+    for i, leaf in enumerate(leaves):
+        key = jax.random.fold_in(rng, i) if fmt.stochastic else None
+        p = fmt.encode(leaf, rng=key)
+        payloads.append(p)
+        if with_residual:
+            r = fmt.decode(p, leaf.shape, leaf.dtype)
+            rec.append(r)
+            err.append(leaf - r)
+    if not with_residual:
+        return jax.tree.unflatten(treedef, payloads), None, None
+    return (jax.tree.unflatten(treedef, payloads),
+            jax.tree.unflatten(treedef, rec),
+            jax.tree.unflatten(treedef, err))
 
 
 def compress_tree(tree: Tree, mode: str = "int8",
-                  error: Optional[Tree] = None) -> Tuple[Tree, Tree]:
+                  error: Optional[Tree] = None, rng=None) -> Tuple[Tree, Tree]:
     """Compress-decompress a payload tree with error feedback.
 
     Returns ``(reconstructed, new_error)`` where ``reconstructed`` is what
     crosses the wire after a round trip and ``new_error`` is the residual
-    the sender must fold into its *next* payload:
-
-        eff           = tree + error          (error defaults to zeros)
-        reconstructed = decompress(compress(eff))
-        new_error     = eff - reconstructed   (exact, in fp32)
+    the sender must fold into its *next* payload.
     """
-    eff = tree if error is None else jax.tree.map(jnp.add, tree, error)
-    rec = jax.tree.map(lambda x: _roundtrip_leaf(x, mode), eff)
-    err = jax.tree.map(jnp.subtract, eff, rec)
+    _, rec, err = encode_tree(tree, mode, error=error, rng=rng)
     return rec, err
 
+
+# ---------------------------------------------------------------------------
+# Billing
+# ---------------------------------------------------------------------------
 
 def payload_bytes(tree: Tree, mode: str = "int8") -> int:
     """Wire bytes for one push of ``tree`` under ``mode``.
 
-    int8 bills the unpadded int8 elements plus one fp32 scale per
-    256-element block; fp16/none bill 2/4 bytes per element.  Leaf dtypes
-    are ignored — the wire format, not the in-memory dtype, is billed.
+    Blocked formats bill the unpadded elements (sub-byte formats at
+    bits/8 per element) plus one fp32 scale per block; fp16/none bill 2/4
+    bytes per element.  Leaf dtypes are ignored — the wire format, not the
+    in-memory dtype, is billed.
     """
-    if mode not in MODES:
-        raise ValueError(f"unknown compression mode {mode!r} (want {MODES})")
-    total = 0
-    for leaf in jax.tree.leaves(tree):
-        n = int(leaf.size)
-        if mode == "none":
-            total += 4 * n
-        elif mode == "fp16":
-            total += 2 * n
-        else:  # int8: payload + per-block scales
-            nblocks = -(-n // BLOCK)
-            total += n + 4 * nblocks
-    return total
+    fmt = get_format(mode)
+    return sum(fmt.payload_bytes(leaf.shape)
+               for leaf in jax.tree.leaves(tree))

@@ -18,6 +18,13 @@ identity (closed rounds ship one scalar, no model bytes).
 
 Gate-open pods *refresh*: they restart local training from the new global
 model, exactly as a paper worker does after a push+pull.
+
+Compression goes through the :mod:`repro.dist.wire` registry.  The merge
+consumes the encoded *payloads* — on the fused-kernel path a format's
+``fused_merge`` hook (the Pallas dequant-merge kernel for int8/int4) merges
+``(q, scales)`` straight into the global leaf without ever materializing a
+dequantized fp32 delta tree; the jnp path decodes per leaf and is the
+oracle the kernel is pinned against.
 """
 from __future__ import annotations
 
@@ -28,7 +35,9 @@ import jax.numpy as jnp
 
 from repro.config import HermesConfig
 from repro.core.gup import gup_gate_jax, gup_state_jax
-from repro.dist.compression import compress_tree
+from repro.dist.compression import (
+    encode_tree, get_format, resolve_kernel_dispatch,
+)
 
 Tree = Any
 
@@ -59,10 +68,24 @@ def _merge_leaf_jnp(g, pods, w1, w2, denom, any_push):
     return jnp.where(any_push, merged, g.astype(jnp.float32)).astype(g.dtype)
 
 
+def _merge_recv(w_global, recv, w1, w2, denom, any_push, use_kernel):
+    """The reconstructed-tree merge (uncompressed or decode-fallback path)."""
+    if use_kernel:
+        from repro.kernels import ops
+        return jax.tree.map(
+            lambda g, p: ops.loss_weighted_update(g, p, w1, w2, denom,
+                                                  any_push),
+            w_global, recv)
+    return jax.tree.map(
+        lambda g, p: _merge_leaf_jnp(g, p, w1, w2, denom, any_push),
+        w_global, recv)
+
+
 def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
                  w_global: Tree, L: jnp.ndarray, *,
                  compression: str = "none", error: Optional[Tree] = None,
-                 use_kernel: bool = False
+                 use_kernel: bool = False, rng=None,
+                 track_error: bool = True
                  ) -> Tuple[Tree, Tree, Optional[Tree], jnp.ndarray]:
     """One gated loss-weighted merge over pod-stacked parameters.
 
@@ -72,12 +95,20 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
       losses:     (n_pods,) fp32 eval losses (the paper's L_temp per pod).
       w_global:   unstacked global-model pytree.
       L:          scalar eval loss of the current global model.
-      compression: "none" | "fp16" | "int8" wire format for the push
-        deltas (each pushing pod transmits ``w_i - w_global``).
+      compression: wire-format name from the :mod:`repro.dist.wire`
+        registry for the push deltas (each pushing pod transmits
+        ``w_i - w_global``).
       error:      per-pod error-feedback residual tree (same structure as
         ``pod_params``) from the previous round, or None.
-      use_kernel: route the weighted reduction through the fused Pallas
-        merge kernel instead of the jnp form (identical math).
+      use_kernel: route the merge through the Pallas kernels — the fused
+        dequant-merge kernel when the format has a ``fused_merge`` hook
+        (the compressed payload flows through the merge directly), else the
+        fp32 loss-weighted-update kernel (identical math).
+      rng:        PRNG key for stochastic formats (int4); fold per round.
+      track_error: compute and return the error-feedback residual.  With
+        ``track_error=False`` on the fused-kernel path the payloads are
+        never decoded at all — no reconstructed fp32 delta tree exists,
+        even outside jit — and ``new_error`` is None.
 
     Returns ``(new_pod_params, new_w_global, new_error, any_push)``.
     Closed-gate pods keep their local parameters and their pending error;
@@ -99,32 +130,56 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
         return jnp.where(_pod_mask(gates, leaf), leaf, jnp.zeros_like(leaf))
 
     if compression != "none":
+        fmt = get_format(compression)
+        fused = use_kernel and fmt.fused_merge is not None
         delta = jax.tree.map(
             lambda p, g: _gate_zero(p - g[None]), pod_params, w_global)
         err_in = (None if error is None
                   else jax.tree.map(_gate_zero, error))
-        rec, residual = compress_tree(delta, mode=compression, error=err_in)
-        recv = jax.tree.map(lambda g, d: g[None] + d, w_global, rec)
-        if error is None:
+        # The decode-side reconstruction is only built when something
+        # consumes it: the error-feedback residual, or the non-fused merge.
+        payloads, rec, residual = encode_tree(
+            delta, compression, error=err_in, rng=rng,
+            with_residual=track_error or not fused)
+        if not track_error:
+            new_error = None
+        elif error is None:
             new_error = jax.tree.map(_gate_zero, residual)
         else:
             new_error = jax.tree.map(
                 lambda r, e: jnp.where(_pod_mask(gates, r), r, e),
                 residual, error)
+        if fused:
+            # Payloads flow through the merge: the fused kernel dequantizes
+            # (q, scales) inside its VMEM pass.  A leaf whose blocked axis
+            # is the pod axis itself (stacked scalars) has no per-pod block
+            # layout, so it falls back to the reconstructed form.
+            from repro.dist.wire import block_axis
+            n_pods = gates.shape[0]
+            g_leaves, treedef = jax.tree.flatten(w_global)
+            p_leaves = treedef.flatten_up_to(payloads)
+            d_leaves = treedef.flatten_up_to(delta)
+
+            def _fallback(g, p, dl):
+                r = fmt.decode(p, dl.shape, dl.dtype)
+                return _merge_leaf_jnp(g, g[None] + r, w1, w2, denom,
+                                       any_push)
+
+            merged = [
+                fmt.fused_merge(g, p, w2, denom, any_push)
+                if block_axis((n_pods,) + tuple(g.shape)) >= 1
+                else _fallback(g, p, dl)
+                for g, p, dl in zip(g_leaves, p_leaves, d_leaves)]
+            new_global = jax.tree.unflatten(treedef, merged)
+        else:
+            recv = jax.tree.map(lambda g, d: g[None] + d, w_global, rec)
+            new_global = _merge_recv(w_global, recv, w1, w2, denom,
+                                     any_push, use_kernel)
     else:
         recv = jax.tree.map(_gate_zero, pod_params)
-        new_error = error
-
-    if use_kernel:
-        from repro.kernels import ops
-        new_global = jax.tree.map(
-            lambda g, p: ops.loss_weighted_update(g, p, w1, w2, denom,
-                                                  any_push),
-            w_global, recv)
-    else:
-        new_global = jax.tree.map(
-            lambda g, p: _merge_leaf_jnp(g, p, w1, w2, denom, any_push),
-            w_global, recv)
+        new_error = error if track_error else None
+        new_global = _merge_recv(w_global, recv, w1, w2, denom,
+                                 any_push, use_kernel)
 
     # refresh: pushing pods restart from the merged global model
     new_pods = jax.tree.map(
@@ -136,22 +191,56 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
 def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
                  w_global: Tree, L: jnp.ndarray, cfg: HermesConfig, *,
                  error: Optional[Tree] = None,
-                 use_kernel: bool = False) -> Dict[str, Any]:
+                 use_kernel: Optional[bool] = None,
+                 rng=None) -> Dict[str, Any]:
     """One full Level-B round: per-pod Algorithm-1 gates, then the merge.
 
     The gate is the vmapped device twin of ``core.gup.gup_update`` (same
     z-score, alpha decay, and ring-buffer bookkeeping), so a Level-B run
     opens its gates on exactly the rounds the Level-A host simulator would.
 
+    The merge is wrapped in ``jax.lax.cond`` on ``any_push``: the gate
+    reduction is one scalar, and a fully closed round takes the identity
+    branch — it never pays the merge collective's latency, and its output
+    is bit-identical to the inputs (the ROADMAP "Gate/merge overlap" item).
+
+    ``use_kernel=None`` resolves the kernel-vs-jnp dispatch from
+    ``cfg.kernel_dispatch`` and the ``REPRO_WIRE_KERNEL`` env var
+    (``dist.compression.resolve_kernel_dispatch``).
+
     Returns a dict: pod_params, w_global, gup, error, gates, any_push.
     """
+    if use_kernel is None:
+        use_kernel = resolve_kernel_dispatch(
+            getattr(cfg, "kernel_dispatch", "auto"))
     gates, new_gup = jax.vmap(
         lambda s, x: gup_gate_jax(s, x, cfg))(gup_state, pod_losses)
-    new_pods, new_global, new_error, any_push = hermes_merge(
-        pod_params, gates, pod_losses, w_global, L,
-        compression=cfg.compression,
-        error=error if cfg.error_feedback else None,
-        use_kernel=use_kernel)
+    any_push = jnp.any(gates.astype(bool))
+    err_in = error if cfg.error_feedback else None
+    # hermes_merge tracks a residual for every non-"none" format (lossless
+    # ones just carry exact zeros), so the closed branch must mirror that
+    # exactly or lax.cond's output trees diverge.
+    compressed = cfg.compression != "none"
+
+    def _open(args):
+        pods, wg, err = args
+        new_pods, new_global, new_error, _ = hermes_merge(
+            pods, gates, pod_losses, wg, L,
+            compression=cfg.compression, error=err,
+            use_kernel=use_kernel, rng=rng,
+            track_error=cfg.error_feedback)
+        return new_pods, new_global, new_error
+
+    def _closed(args):
+        pods, wg, err = args
+        # A compressed error-tracking round with no residual yet starts one
+        # at zero so both cond branches return the same pytree structure.
+        if compressed and cfg.error_feedback and err is None:
+            err = jax.tree.map(jnp.zeros_like, pods)
+        return pods, wg, err
+
+    new_pods, new_global, new_error = jax.lax.cond(
+        any_push, _open, _closed, (pod_params, w_global, err_in))
     return {
         "pod_params": new_pods,
         "w_global": new_global,

@@ -1,0 +1,264 @@
+"""Pluggable wire-format registry for the Hermes push payloads.
+
+Replaces the old ``"none"|"fp16"|"int8"`` string-switch (DESIGN.md
+§compression): every format is an object that owns its whole wire contract —
+
+* ``encode(leaf) -> payload``    dict of arrays that cross the pod axis,
+* ``decode(payload, shape, dtype)``  the receiver-side reconstruction,
+* ``payload_bytes(shape)``       wire bytes billed for one leaf (the single
+  source of truth `CommModel` and the benchmarks use),
+* ``fused_merge`` (optional)     a hook that merges the *compressed* payload
+  straight into the global model through the Pallas dequant-merge kernel,
+  so the merge never round-trips a dequantized fp32 delta tree.
+
+Blocked formats are **shard-local**: the absmax blocks tile exactly one
+axis (``block_axis`` — the rightmost whole-block axis) and every other axis
+is untouched, so a pod/data/model-sharded leaf quantizes without any
+resharding (the old layout flattened each leaf, which forced an all-gather
+before quantization at the multi-pod mesh — ROADMAP "Sharded compression").
+Block boundaries align with shard boundaries whenever the per-shard slice
+of the blocked axis is a multiple of ``BLOCK``.
+
+New formats register themselves::
+
+    class MyFormat(WireFormat):
+        name = "my4bit"
+        ...
+    register(MyFormat())
+
+after which ``HermesConfig(compression="my4bit")`` validates and the whole
+pipeline (Level-A billing, Level-B merge, benchmarks) picks it up.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Payload = Dict[str, jnp.ndarray]
+
+BLOCK = 256  # absmax block along the last axis; kernels/quantize.py agrees
+
+
+def _norm_shape(shape) -> Tuple[int, ...]:
+    """Scalars are treated as one-element vectors throughout."""
+    s = tuple(int(x) for x in shape)
+    return s if s else (1,)
+
+
+def _numel(shape) -> int:
+    return int(math.prod(_norm_shape(shape)))
+
+
+def block_axis(shape) -> int:
+    """Which axis the absmax blocks tile for a leaf of ``shape``.
+
+    The rightmost axis whose size is a whole number of blocks, else the
+    last axis (zero-padded to blocks).  Whole-block axes keep the layout
+    shard-local whenever the per-shard slice is also a multiple of
+    ``BLOCK`` — e.g. a 151936-vocab logits dim sharded 16-way can never
+    align with 256-blocks, but its 4096 embed axis can, so the blocks tile
+    embed and the compress step stays collective-free (the
+    ``hermes_dryrun`` assertion).  Deterministic in the shape alone, so
+    encode and decode never need side-channel metadata.
+    """
+    s = _norm_shape(shape)
+    for ax in range(len(s) - 1, -1, -1):
+        if s[ax] % BLOCK == 0:
+            return ax
+    return len(s) - 1
+
+
+class WireFormat:
+    """One wire format.  Subclass, set ``name``, implement the contract."""
+
+    name: str = "?"
+    lossy: bool = True
+    stochastic: bool = False  # True -> ``encode`` consumes an rng key
+
+    def encode(self, x: jnp.ndarray, *, rng=None) -> Payload:
+        raise NotImplementedError
+
+    def decode(self, payload: Payload, shape, dtype) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def payload_bytes(self, shape) -> int:
+        raise NotImplementedError
+
+    # Optional fused-merge hook: merge the payload of a pod-stacked delta
+    # leaf directly into the global leaf ``g`` without materializing the
+    # dequantized delta.  ``None`` means the merge falls back to
+    # decode + loss_weighted_update.
+    fused_merge = None
+
+
+# ---------------------------------------------------------------------------
+# Built-in formats
+# ---------------------------------------------------------------------------
+
+class NoneFormat(WireFormat):
+    """fp32 leaves verbatim: 4 bytes/element."""
+
+    name = "none"
+    lossy = False
+
+    def encode(self, x, *, rng=None):
+        return {"x": x}
+
+    def decode(self, payload, shape, dtype):
+        return payload["x"].reshape(shape).astype(dtype)
+
+    def payload_bytes(self, shape):
+        return 4 * _numel(shape)
+
+
+class Fp16Format(WireFormat):
+    """Half-precision cast (the paper's §IV-D format): 2 bytes/element."""
+
+    name = "fp16"
+
+    def encode(self, x, *, rng=None):
+        return {"h": x.astype(jnp.float16)}
+
+    def decode(self, payload, shape, dtype):
+        return payload["h"].reshape(shape).astype(dtype)
+
+    def payload_bytes(self, shape):
+        return 2 * _numel(shape)
+
+
+class BlockedIntFormat(WireFormat):
+    """Shared machinery of the blocked integer formats (int8, int4).
+
+    Wire layout per leaf: with ``ax = block_axis(shape)``, ``d = shape[ax]``
+    and ``nb = ceil(d/BLOCK)``:
+
+        q:      shape with axis ax -> nb*BLOCK   int8 (zero-padded blocks)
+        scales: shape with axis ax -> nb         fp32 (per-block absmax/qmax)
+
+    Every other axis is preserved verbatim (shard-local — no leaf flatten).
+    ``q`` holds the quantized values in [-qmax, qmax]; sub-byte formats
+    still store one int8 per element in memory but bill ``bits/8`` bytes
+    per element on the wire (packing is a wire-protocol concern, not a
+    compute-layout one).
+    """
+
+    bits: int = 8
+    qmax: int = 127
+
+    def _round(self, y: jnp.ndarray, rng) -> jnp.ndarray:
+        return jnp.round(y)
+
+    def encode(self, x, *, rng=None):
+        s = _norm_shape(x.shape)
+        ax = block_axis(s)
+        d = s[ax]
+        nb = -(-d // BLOCK)
+        xb = x.reshape(s).astype(jnp.float32)
+        pad = nb * BLOCK - d
+        if pad:
+            widths = [(0, 0)] * len(s)
+            widths[ax] = (0, pad)
+            xb = jnp.pad(xb, widths)
+        xb = xb.reshape(s[:ax] + (nb, BLOCK) + s[ax + 1:])
+        scale = jnp.max(jnp.abs(xb), axis=ax + 1, keepdims=True) \
+            / float(self.qmax)
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(self._round(xb / scale, rng),
+                     -float(self.qmax), float(self.qmax))
+        return {"q": q.astype(jnp.int8).reshape(
+                    s[:ax] + (nb * BLOCK,) + s[ax + 1:]),
+                "scales": scale.astype(jnp.float32).reshape(
+                    s[:ax] + (nb,) + s[ax + 1:])}
+
+    def decode(self, payload, shape, dtype):
+        q, sc = payload["q"], payload["scales"]
+        s = _norm_shape(shape)
+        ax = block_axis(s)
+        d = s[ax]
+        nb = sc.shape[ax]
+        xb = q.reshape(s[:ax] + (nb, BLOCK) + s[ax + 1:]).astype(jnp.float32) \
+            * jnp.expand_dims(sc, ax + 1)
+        flat = xb.reshape(s[:ax] + (nb * BLOCK,) + s[ax + 1:])
+        idx = (slice(None),) * ax + (slice(0, d),)
+        return flat[idx].reshape(shape).astype(dtype)
+
+    def payload_bytes(self, shape):
+        s = _norm_shape(shape)
+        n = _numel(s)
+        d = s[block_axis(s)]
+        n_blocks = (n // d) * -(-d // BLOCK)
+        return -(-n * self.bits // 8) + 4 * n_blocks
+
+    def fused_merge(self, g, payload, w2, denom, any_push):
+        # ax mirrors what encode() chose for the stacked delta leaf, whose
+        # shape is exactly (n_pods,) + g.shape.
+        from repro.kernels import ops
+        n_pods = payload["q"].shape[0]
+        ax = block_axis((n_pods,) + tuple(g.shape))
+        return ops.dequant_merge(g, payload["q"], payload["scales"],
+                                 w2, denom, any_push, axis=ax)
+
+
+class Int8Format(BlockedIntFormat):
+    """Blockwise int8 absmax (round-to-nearest): 1 byte/element + scales."""
+
+    name = "int8"
+    bits, qmax = 8, 127
+
+
+class Int4Format(BlockedIntFormat):
+    """Blockwise int4 with **stochastic rounding**: 0.5 bytes/element.
+
+    ``q = floor(x/scale + u)``, ``u ~ U[0, 1)`` — unbiased in expectation
+    (E[q·scale] = x inside the representable range), so quantization noise
+    averages out across rounds instead of drifting; the error-feedback
+    residual one level up (``compress_tree``) absorbs what is left.  Pass a
+    fresh ``rng`` per round; with ``rng=None`` the rounding falls back to a
+    fixed key (deterministic, still bounded-error, no longer unbiased
+    across rounds).
+    """
+
+    name = "int4"
+    bits, qmax = 4, 7
+    stochastic = True
+
+    def _round(self, y, rng):
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        return jnp.floor(y + jax.random.uniform(rng, y.shape))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, WireFormat] = {}
+
+
+def register(fmt: WireFormat, *, overwrite: bool = False) -> WireFormat:
+    """Add ``fmt`` to the registry (``overwrite=True`` to replace)."""
+    if not overwrite and fmt.name in _REGISTRY:
+        raise ValueError(f"wire format {fmt.name!r} already registered")
+    _REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+def get_format(name: str) -> WireFormat:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown compression mode {name!r} "
+                         f"(want one of {available_formats()})") from None
+
+
+def available_formats() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register(NoneFormat())
+register(Fp16Format())
+register(Int8Format())
+register(Int4Format())

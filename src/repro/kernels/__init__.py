@@ -4,4 +4,6 @@
 #   rglru_scan           — RG-LRU linear recurrence
 #   quantize             — int8 blockwise gradient-push compression
 #   loss_weighted_update — fused Algorithm-2 merge
+#   dequant_merge        — fused dequant + Algorithm-2 merge over (q, scales)
+#                          int8/int4 wire payloads (no fp32 delta round-trip)
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.

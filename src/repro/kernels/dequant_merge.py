@@ -1,0 +1,114 @@
+"""Fused dequant + loss-weighted merge kernel (the compressed-path merge).
+
+Consumes the blocked int8/int4 wire payload ``(q, scales)`` of the
+pod-stacked push deltas *directly* — no dequantized fp32 delta tree is ever
+materialized in HBM.  Per parameter tile:
+
+    out = any_push ? g + (Σ_i w2_i · q_i·s_i) / denom : g
+
+which equals the jnp recv-path form ``(w1·g + Σ_i w2_i·(g + d_i)) / denom``
+exactly in real arithmetic because ``denom = w1 + Σ w2`` (the two differ
+only in fp32 association; see ``ref.dequant_merge_ref``).  Fusing dequant,
+the weighted reduction, and the closed-round select into one VMEM pass
+reads int8 instead of fp32 deltas — the merge is memory-bound, so this
+halves its HBM traffic again on top of the fused fp32 merge kernel.
+
+Tiling: ``q`` rides in (n_pods, 32, 128) tiles — (32, 128) is the int8
+minimum tile — with ``g``/``out`` as (32, 128) fp32-family tiles.  The
+per-256-element block scales are pre-expanded by the wrapper to one scale
+per 128-lane row so the kernel broadcast is a plain (32, 1) * (32, 128).
+Scalars (denom, any_push, per-pod w2) ride in one small fp32 operand
+broadcast to every tile.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256  # quantization block (matches dist/wire.py)
+SUB = 32     # int8 sublane tile
+LANE = 128
+
+
+def _kernel(g_ref, q_ref, s_ref, w_ref, o_ref, *, n_pods: int):
+    g = g_ref[...].astype(jnp.float32)            # (SUB, LANE)
+    w = w_ref[...]                                # (1, 2 + n_pods)
+    denom = w[0, 0]
+    any_push = w[0, 1] > 0.5
+    acc = denom * g
+    for i in range(n_pods):
+        deq = q_ref[i].astype(jnp.float32) * s_ref[i]   # (SUB,LANE)*(SUB,1)
+        acc = acc + w[0, 2 + i] * deq
+    merged = acc / denom
+    o_ref[...] = jnp.where(any_push, merged, g).astype(o_ref.dtype)
+
+
+def dequant_merge(g: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
+                  w2, denom, any_push, *, block: int = BLOCK,
+                  axis: int = -1, interpret: bool = False) -> jnp.ndarray:
+    """g: global leaf; q: pod-stacked int8 payload; scales: per-block fp32.
+    w2: (n_pods,).  Returns the merged leaf.
+
+    The payload layout is the shard-local blocked format of
+    ``dist.wire.BlockedIntFormat``: blocks tile ``axis`` of the stacked
+    arrays (axis - 1 of ``g``; ``axis >= 1`` — the pod axis cannot be the
+    blocked one) and every other axis is verbatim.  Internally the blocked
+    axis is moved last, the rest flattened into (32, 128) int8 tiles.
+    """
+    n_pods = q.shape[0]
+    shape = g.shape
+    if g.ndim == 0:  # scalars: the wire layout treats them as (1,)
+        g = g.reshape(1)
+    ax = axis % q.ndim
+    if ax == 0:
+        raise ValueError("blocked axis must not be the pod axis")
+    if ax != q.ndim - 1:
+        q = jnp.moveaxis(q, ax, -1)
+        scales = jnp.moveaxis(scales, ax, -1)
+        g = jnp.moveaxis(g, ax - 1, -1)
+    d = g.shape[-1]
+    d_pad = q.shape[-1]
+    if d_pad != d:
+        g = jnp.pad(g, [(0, 0)] * (g.ndim - 1) + [(0, d_pad - d)])
+    lead = math.prod(g.shape[:-1])
+    n = lead * d_pad                                # multiple of block
+    rows = n // LANE
+    g2 = g.reshape(rows, LANE)
+    q2 = q.reshape(n_pods, rows, LANE)
+    # one scale per 128-lane row, expanded from the per-block scales
+    s2 = jnp.repeat(scales.reshape(n_pods, n // block),
+                    block // LANE, axis=1)[..., None]  # (n_pods, rows, 1)
+    pad_r = (-rows) % SUB
+    if pad_r:
+        g2 = jnp.pad(g2, ((0, pad_r), (0, 0)))
+        q2 = jnp.pad(q2, ((0, 0), (0, pad_r), (0, 0)))
+        s2 = jnp.pad(s2, ((0, 0), (0, pad_r), (0, 0)), constant_values=1.0)
+        rows += pad_r
+    scal = jnp.concatenate([
+        jnp.asarray(denom, jnp.float32).reshape(1),
+        jnp.asarray(any_push, jnp.float32).reshape(1),
+        jnp.asarray(w2, jnp.float32).reshape(-1),
+    ]).reshape(1, -1)
+
+    kern = functools.partial(_kernel, n_pods=n_pods)
+    out = pl.pallas_call(
+        kern,
+        grid=(rows // SUB,),
+        in_specs=[
+            pl.BlockSpec((SUB, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_pods, SUB, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_pods, SUB, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, 2 + n_pods), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((SUB, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), g.dtype),
+        interpret=interpret,
+    )(g2, q2, s2, scal)
+    out = out.reshape(-1)[:n].reshape(g.shape[:-1] + (d_pad,))[..., :d]
+    if ax != q.ndim - 1:
+        out = jnp.moveaxis(out, -1, ax - 1)
+    return out.reshape(shape)

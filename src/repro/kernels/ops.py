@@ -18,6 +18,7 @@ from repro.kernels import rwkv6_scan as _wkv
 from repro.kernels import rglru_scan as _lru
 from repro.kernels import quantize as _qz
 from repro.kernels import loss_weighted_update as _lwu
+from repro.kernels import dequant_merge as _dqm
 
 
 def _interpret() -> bool:
@@ -69,3 +70,10 @@ def dequantize_int8(q, scales, shape):
 def loss_weighted_update(g, pods, w1, w2, denom, any_push):
     return _lwu.loss_weighted_update(g, pods, w1, w2, denom, any_push,
                                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block", "axis"))
+def dequant_merge(g, q, scales, w2, denom, any_push, *, block=256, axis=-1):
+    """Merge blocked int payloads (q, scales) straight into the global leaf."""
+    return _dqm.dequant_merge(g, q, scales, w2, denom, any_push,
+                              block=block, axis=axis, interpret=_interpret())

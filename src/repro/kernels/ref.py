@@ -94,3 +94,35 @@ def loss_weighted_update_ref(g, pods, w1, w2, denom, any_push):
     merged = acc / denom
     return jnp.where(jnp.asarray(any_push, bool), merged,
                      g.astype(jnp.float32)).astype(g.dtype)
+
+
+def dequant_merge_ref(g, q, scales, w2, denom, any_push, *, block=256,
+                      axis=-1):
+    """Fused dequant + loss-weighted merge over blocked int payloads.
+
+    g: global leaf; q: pod-stacked int8; scales: per-block fp32, with the
+    blocks tiling ``axis`` of the stacked arrays (axis - 1 of ``g``).
+    Computes ``any_push ? (denom*g + Σ_i w2_i * q_i*s_i) / denom : g`` with
+    the dequant in the shard-local blocked layout of ``dist.wire``.
+    """
+    shape = g.shape
+    gf = g.reshape(1) if g.ndim == 0 else g
+    ax = axis % q.ndim
+    if ax != q.ndim - 1:
+        q = jnp.moveaxis(q, ax, -1)
+        scales = jnp.moveaxis(scales, ax, -1)
+        gf = jnp.moveaxis(gf, ax - 1, -1)
+    d = gf.shape[-1]
+    nb = scales.shape[-1]
+    lead = q.shape[:-1]                              # (n_pods, ...)
+    deq = q.reshape(lead + (nb, block)).astype(jnp.float32) \
+        * scales[..., None]
+    deq = deq.reshape(lead + (nb * block,))[..., :d]  # (n_pods, ..., d)
+    acc = jnp.asarray(denom, jnp.float32) * gf.astype(jnp.float32) \
+        + jnp.tensordot(jnp.asarray(w2, jnp.float32), deq, axes=(0, 0))
+    merged = acc / denom
+    out = jnp.where(jnp.asarray(any_push, bool), merged,
+                    gf.astype(jnp.float32))
+    if ax != q.ndim - 1:
+        out = jnp.moveaxis(out, -1, ax - 1)
+    return out.reshape(shape).astype(g.dtype)

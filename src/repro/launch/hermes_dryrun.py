@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.config import HermesConfig
 from repro.configs import get_config
+from repro.dist.compression import encode_tree
 from repro.dist.hermes_sync import hermes_pod_state, hermes_round
 from repro.launch.mesh import arch_parallel_config, arch_rules, make_production_mesh
 from repro.launch.steps import abstract_init_lm, _shard_tree
@@ -67,7 +68,27 @@ def main() -> None:
         out = hermes_round(pod_p, gup_state, pod_losses, w_global, L, hcfg)
         return out["pod_params"], out["w_global"], out["gup"], out["any_push"]
 
+    # Collective-schedule audit of the compress step alone (ISSUE 2 /
+    # ROADMAP "Sharded compression"): the blocked wire layout is computed
+    # per shard — no leaf flatten — so quantizing the pod-stacked delta must
+    # insert *zero* all-gathers.  The old flat layout collapsed every
+    # sharded axis and forced an all-gather per leaf before quantization.
+    def compress_fn(pod_p, w_g):
+        delta = jax.tree.map(lambda p, g: p - g[None], pod_p, w_g)
+        payloads, _, _ = encode_tree(delta, mode=hcfg.compression)
+        return payloads
+
     with mesh:
+        cjit = jax.jit(compress_fn,
+                       in_shardings=(pod_shardings, global_shardings))
+        ccost = parse_hlo_cost(
+            cjit.lower(pod_params, abstract_params).compile().as_text())
+        n_ag = sum(v for k, v in ccost.collective_counts.items()
+                   if "all-gather" in k)
+        assert n_ag == 0, (
+            f"shard-local compress step must not all-gather, got "
+            f"{ccost.collective_counts}")
+
         jitted = jax.jit(
             round_fn,
             in_shardings=(pod_shardings, gup_sh, rep, global_shardings, rep),
@@ -89,6 +110,8 @@ def main() -> None:
             "collectives": cost.collective_counts,
             "bytes": cost.bytes,
             "merge_collective_s": cost.collective_bytes / 50e9,
+            "compress_collectives": ccost.collective_counts,
+            "compress_all_gathers": n_ag,
         }
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

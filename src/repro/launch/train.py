@@ -177,7 +177,9 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
             rounds += 1
             pod_losses = pod_eval(pod_params)
             out = hermes_round(pod_params, gup, pod_losses, w_global,
-                               L_global, hcfg, error=error)
+                               L_global, hcfg, error=error,
+                               rng=jax.random.fold_in(
+                                   jax.random.PRNGKey(seed), i))
             pod_params, w_global = out["pod_params"], out["w_global"]
             gup, error = out["gup"], out["error"]
             if bool(out["any_push"]):

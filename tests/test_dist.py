@@ -1,14 +1,19 @@
-"""Sharding rules, compression error feedback, HLO cost parser."""
+"""Sharding rules, wire-format registry, compression error feedback, HLO parser."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as PS
 
-from repro.config import ParallelConfig
+from repro.config import HermesConfig, ParallelConfig
 from repro.configs import get_config
 from repro.dist.sharding import AxisRules, make_rules
-from repro.dist.compression import compress_tree, payload_bytes
+from repro.dist.compression import (
+    compress_tree, payload_bytes, resolve_kernel_dispatch,
+)
+from repro.dist.wire import (
+    BLOCK, WireFormat, available_formats, block_axis, get_format, register,
+)
 from repro.launch.mesh import arch_rules
 from repro.roofline.hlo_parse import parse_hlo_cost, shape_bytes
 
@@ -66,8 +71,135 @@ def test_error_feedback_accumulates_residual():
 
 def test_payload_bytes_ordering():
     tree = {"g": jnp.zeros(10000)}
-    assert payload_bytes(tree, "int8") < payload_bytes(tree, "fp16") \
-        < payload_bytes(tree, "none")
+    assert payload_bytes(tree, "int4") < payload_bytes(tree, "int8") \
+        < payload_bytes(tree, "fp16") < payload_bytes(tree, "none")
+
+
+# ---------------------------------------------------------------------------
+# WireFormat registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtins_and_rejects_unknown():
+    assert {"none", "fp16", "int8", "int4"} <= set(available_formats())
+    with pytest.raises(ValueError, match="unknown compression"):
+        get_format("gzip")
+    with pytest.raises(ValueError, match="unknown compression"):
+        payload_bytes({"g": jnp.zeros(8)}, "gzip")
+
+
+def test_registry_register_and_validate_roundtrip():
+    class Fp8ish(WireFormat):
+        name = "testonly-fp8"
+
+        def encode(self, x, *, rng=None):
+            return {"h": x.astype(jnp.float16)}  # stand-in payload
+
+        def decode(self, payload, shape, dtype):
+            return payload["h"].reshape(shape).astype(dtype)
+
+        def payload_bytes(self, shape):
+            return int(np.prod(shape)) or 1
+
+    try:
+        register(Fp8ish())
+        with pytest.raises(ValueError, match="already registered"):
+            register(Fp8ish())
+        # config validation accepts any registered name, rejects others
+        HermesConfig(compression="testonly-fp8").validate()
+        with pytest.raises(AssertionError):
+            HermesConfig(compression="gzip").validate()
+        # tree-level ops pick the new format up immediately
+        tree = {"g": jnp.linspace(-1, 1, 64)}
+        rec, err = compress_tree(tree, mode="testonly-fp8")
+        np.testing.assert_allclose(np.asarray(rec["g"] + err["g"]),
+                                   np.asarray(tree["g"]), atol=1e-7)
+        assert payload_bytes(tree, "testonly-fp8") == 64
+    finally:
+        from repro.dist import wire
+        wire._REGISTRY.pop("testonly-fp8", None)
+
+
+def test_block_axis_prefers_whole_block_axes():
+    assert block_axis((512,)) == 0
+    assert block_axis((300,)) == 0            # padded last axis
+    assert block_axis((4096, 151936)) == 0    # vocab not 256-divisible
+    assert block_axis((2, 4096, 151936)) == 1  # pod-stacked form
+    assert block_axis((4096, 512)) == 1
+    assert block_axis(()) == 0
+
+
+def test_blocked_encode_is_shard_local_layout():
+    """q/scales keep every non-blocked axis verbatim — no leaf flatten."""
+    fmt = get_format("int8")
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 300))
+    p = fmt.encode(x)
+    assert p["q"].shape == (3, 5, 512) and p["q"].dtype == jnp.int8
+    assert p["scales"].shape == (3, 5, 2) and p["scales"].dtype == jnp.float32
+    xr = fmt.decode(p, x.shape, x.dtype)
+    bound = np.asarray(p["scales"]).max() * 0.5 + 1e-7
+    assert np.abs(np.asarray(x - xr)).max() <= bound
+    # non-last blocked axis (vocab-head shape): leading axis blocks
+    y = jax.random.normal(jax.random.PRNGKey(1), (512, 300))
+    py = fmt.encode(y)
+    assert py["q"].shape == (512, 300) and py["scales"].shape == (2, 300)
+    yr = fmt.decode(py, y.shape, y.dtype)
+    bound = np.asarray(py["scales"]).max() * 0.5 + 1e-7
+    assert np.abs(np.asarray(y - yr)).max() <= bound
+
+
+def test_kernel_dispatch_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_WIRE_KERNEL", "1")
+    assert resolve_kernel_dispatch("auto") and resolve_kernel_dispatch("off")
+    monkeypatch.setenv("REPRO_WIRE_KERNEL", "off")
+    assert not resolve_kernel_dispatch("on")
+    monkeypatch.delenv("REPRO_WIRE_KERNEL")
+    assert resolve_kernel_dispatch("on")
+    assert not resolve_kernel_dispatch("off")
+    assert resolve_kernel_dispatch("auto") == (jax.default_backend() == "tpu")
+    with pytest.raises(ValueError, match="kernel_dispatch"):
+        resolve_kernel_dispatch("On")  # typos fail loudly, not silently
+
+
+def test_kernel_path_exercised_on_cpu_via_env(monkeypatch):
+    """REPRO_WIRE_KERNEL=1 routes through the Pallas kernels (interpret
+    mode off-TPU) and agrees with the jnp twin."""
+    from repro.dist import compression as C
+    x = jnp.linspace(-2.0, 2.0, 700)
+    monkeypatch.setenv("REPRO_WIRE_KERNEL", "0")
+    q0, s0 = C.quantize_int8(x)
+    monkeypatch.setenv("REPRO_WIRE_KERNEL", "1")
+    q1, s1 = C.quantize_int8(x)
+    xr = C.dequantize_int8(q1, s1, x.shape)
+    np.testing.assert_array_equal(np.asarray(q1)[:q0.shape[0]],
+                                  np.asarray(q0))
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=0.02)
+
+
+def test_int4_stochastic_rounding_pinned():
+    """Non-hypothesis twin of the test_properties int4 invariants, so they
+    run even where hypothesis is unavailable: per-element error is bounded
+    by one step and the key-averaged reconstruction is unbiased."""
+    fmt = get_format("int4")
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1.0, 300), jnp.float32)
+    p = fmt.encode(x, rng=jax.random.PRNGKey(1))
+    xr = fmt.decode(p, x.shape, x.dtype)
+    step = np.repeat(np.asarray(p["scales"]), BLOCK)[:300]
+    assert np.all(np.abs(np.asarray(x - xr)) <= step + 1e-6)
+    assert np.abs(np.asarray(p["q"])).max() <= 7
+    keys = jax.random.split(jax.random.PRNGKey(2), 256)
+    recs = jax.vmap(
+        lambda k: fmt.decode(fmt.encode(x, rng=k), x.shape, x.dtype))(keys)
+    mean_err = np.abs(np.asarray(jnp.mean(recs, 0) - x))
+    assert np.all(mean_err <= step * 0.25 + 1e-6)
+
+
+def test_payload_bytes_per_format_formulas():
+    n = 10 * BLOCK
+    tree = {"g": jnp.zeros((n,), jnp.float32)}
+    assert payload_bytes(tree, "none") == 4 * n
+    assert payload_bytes(tree, "fp16") == 2 * n
+    assert payload_bytes(tree, "int8") == n + 4 * (n // BLOCK)
+    assert payload_bytes(tree, "int4") == n // 2 + 4 * (n // BLOCK)
 
 
 # ---------------------------------------------------------------------------

@@ -95,3 +95,140 @@ def test_kernel_path_matches_jnp_path():
                                use_kernel=True)
     np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
                                atol=1e-5)
+
+
+def test_fused_compressed_merge_matches_jnp_path():
+    """use_kernel + int8 routes the payload through the fused dequant-merge
+    kernel; output and error residual must match the decode-then-merge path."""
+    pods = {"w": jax.random.normal(jax.random.PRNGKey(8), (3, 40, 17)),
+            "b": jax.random.normal(jax.random.PRNGKey(9), (3, 11))}
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(10), (40, 17)),
+          "b": jnp.zeros((11,))}
+    gates = jnp.array([True, False, True])
+    losses = jnp.array([0.8, 9.9, 1.2])
+    _, g1, e1, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.3),
+                                compression="int8")
+    _, g2, e2, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.3),
+                                compression="int8", use_kernel=True)
+    for k in wg:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   atol=1e-5, err_msg=k)
+        np.testing.assert_allclose(np.asarray(e1[k]), np.asarray(e2[k]),
+                                   atol=1e-7, err_msg=k)
+
+
+def test_fused_merge_consumes_payloads_directly(monkeypatch):
+    """The compressed kernel merge dispatches to ops.dequant_merge with the
+    int8 payload — it never routes a reconstructed fp32 tree through the
+    loss_weighted_update kernel."""
+    from repro.kernels import ops
+    calls = {"fused": 0, "recv": 0}
+    real = ops.dequant_merge
+
+    def spy_fused(g, q, scales, *a, **kw):
+        assert q.dtype == jnp.int8
+        calls["fused"] += 1
+        return real(g, q, scales, *a, **kw)
+
+    def spy_recv(*a, **kw):
+        calls["recv"] += 1
+        raise AssertionError("fp32 recv-tree merge used on the fused path")
+
+    monkeypatch.setattr(ops, "dequant_merge", spy_fused)
+    monkeypatch.setattr(ops, "loss_weighted_update", spy_recv)
+    pods = _pods(jax.random.PRNGKey(11), 2)
+    wg = {"w": jnp.zeros((6, 5))}
+    hermes_merge(pods, jnp.array([True, True]), jnp.array([0.5, 0.6]),
+                 wg, jnp.float32(1.0), compression="int8", use_kernel=True)
+    assert calls["fused"] == 1 and calls["recv"] == 0
+
+
+def test_fused_merge_without_error_feedback_never_decodes(monkeypatch):
+    """track_error=False on the fused path must not build any fp32
+    reconstruction: the payload is only ever read by the kernel."""
+    from repro.dist import wire
+    fmt = wire.get_format("int8")
+    monkeypatch.setattr(
+        type(fmt), "decode",
+        lambda *a, **kw: (_ for _ in ()).throw(
+            AssertionError("decode called on the no-residual fused path")))
+    pods = _pods(jax.random.PRNGKey(15), 2)
+    wg = {"w": jnp.zeros((6, 5))}
+    _, new_g, new_err, _ = hermes_merge(
+        pods, jnp.array([True, True]), jnp.array([0.5, 0.6]), wg,
+        jnp.float32(1.0), compression="int8", use_kernel=True,
+        track_error=False)
+    assert new_err is None
+    assert bool(jnp.all(jnp.isfinite(new_g["w"])))
+
+
+def test_int4_stochastic_merge_close_to_exact():
+    pods = _pods(jax.random.PRNGKey(12), 2)
+    wg = {"w": jnp.zeros((6, 5))}
+    gates = jnp.array([True, True])
+    losses = jnp.array([0.5, 0.5])
+    _, g_exact, _, _ = hermes_merge(pods, gates, losses, wg,
+                                    jnp.float32(1.0), compression="none")
+    _, g_int4, _, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.0),
+                                   compression="int4",
+                                   rng=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(g_int4["w"]),
+                               np.asarray(g_exact["w"]), atol=0.2)
+
+
+def test_round_with_custom_lossless_format():
+    """A registered lossless WireFormat must work through hermes_round's
+    lax.cond with default error feedback (both branches carry a residual
+    tree for every non-'none' format; lossless ones hold exact zeros)."""
+    from repro.dist import wire
+
+    class Exact(wire.WireFormat):
+        name = "testonly-exact"
+        lossy = False
+
+        def encode(self, x, *, rng=None):
+            return {"x": x}
+
+        def decode(self, payload, shape, dtype):
+            return payload["x"].reshape(shape).astype(dtype)
+
+        def payload_bytes(self, shape):
+            return 4 * max(1, int(np.prod(shape)))
+
+    try:
+        wire.register(Exact())
+        cfg = HermesConfig(alpha=-0.0001, window=3, lam=1,
+                           compression="testonly-exact")
+        n = 2
+        pods = _pods(jax.random.PRNGKey(16), n)
+        gst = hermes_pod_state(cfg, n)
+        wg = {"w": jnp.zeros((6, 5))}
+        error = None
+        for i in range(4):
+            losses = jnp.array([1.0 / (i + 1), 2.0 / (i + 1)], jnp.float32)
+            out = hermes_round(pods, gst, losses, wg, jnp.float32(1.0), cfg,
+                               error=error)
+            gst, error = out["gup"], out["error"]
+            wg = out["w_global"]
+        assert float(jnp.abs(error["w"]).max()) == 0.0  # lossless residual
+    finally:
+        wire._REGISTRY.pop("testonly-exact", None)
+
+
+def test_closed_round_skips_merge_and_stays_bit_identical(monkeypatch):
+    """hermes_round wraps the merge in lax.cond on any_push: a fully closed
+    round must return its inputs bit-identically (compressed config included)
+    without tracing a push."""
+    cfg = HermesConfig(alpha=-3.0, window=4, lam=100, compression="int8")
+    n = 3
+    pods = _pods(jax.random.PRNGKey(13), n)
+    gst = hermes_pod_state(cfg, n)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(14), (6, 5))}
+    out = hermes_round(pods, gst, jnp.ones((n,)), wg, jnp.float32(1.0), cfg)
+    assert not bool(out["any_push"])
+    np.testing.assert_array_equal(np.asarray(out["w_global"]["w"]),
+                                  np.asarray(wg["w"]))
+    np.testing.assert_array_equal(np.asarray(out["pod_params"]["w"]),
+                                  np.asarray(pods["w"]))
+    # the error-feedback state starts at zero on closed rounds
+    assert float(jnp.abs(out["error"]["w"]).max()) == 0.0

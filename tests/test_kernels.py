@@ -146,3 +146,55 @@ def test_lwu_vs_ref(shape, n_pods):
         np.testing.assert_allclose(out, want, atol=1e-5)
         if not push:
             np.testing.assert_allclose(out, g, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant-merge
+# ---------------------------------------------------------------------------
+
+def _encoded_delta(key, n_pods, shape, mode="int8"):
+    from repro.dist.wire import block_axis, get_format
+    delta = jax.random.normal(key, (n_pods,) + shape) * 0.1
+    fmt = get_format(mode)
+    p = fmt.encode(delta)
+    return delta, p, block_axis((n_pods,) + shape)
+
+
+@pytest.mark.parametrize("shape", [(256,), (300,), (7, 130), (512, 300),
+                                   (3, 5, 300)])
+@pytest.mark.parametrize("n_pods", [1, 3])
+def test_dequant_merge_vs_ref(shape, n_pods):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    g = jax.random.normal(ks[0], shape)
+    _, p, ax = _encoded_delta(ks[1], n_pods, shape)
+    w2 = jnp.abs(jax.random.normal(ks[2], (n_pods,)))
+    denom = 0.7 + float(jnp.sum(w2))
+    for push in (True, False):
+        out = ops.dequant_merge(g, p["q"], p["scales"], w2, denom, push,
+                                axis=ax)
+        want = ref.dequant_merge_ref(g, p["q"], p["scales"], w2, denom, push,
+                                     axis=ax)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-5)
+        if not push:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(g),
+                                       atol=1e-7)
+
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_dequant_merge_matches_fp32_roundtrip_semantics(mode):
+    """The fused kernel must equal the decode-then-merge path: merging the
+    payload directly is a layout change, not a semantics change."""
+    from repro.dist.wire import get_format
+    n_pods, shape = 3, (7, 130)
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    g = jax.random.normal(ks[0], shape)
+    delta, p, ax = _encoded_delta(ks[1], n_pods, shape, mode)
+    fmt = get_format(mode)
+    deq = fmt.decode(p, delta.shape, delta.dtype)        # the fp32 round-trip
+    w1, w2 = 0.7, jnp.array([0.5, 0.0, 1.25])
+    denom = w1 + float(w2.sum())
+    recv = g[None] + deq
+    want = (w1 * g + jnp.tensordot(w2, recv, axes=(0, 0))) / denom
+    out = ops.dequant_merge(g, p["q"], p["scales"], w2, denom, True, axis=ax)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)

@@ -1,5 +1,6 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -132,6 +133,54 @@ def test_payload_bytes_matches_int8_wire_format(n):
     if n > 8:  # below ~8 elements the per-block scale dominates
         assert payload_bytes(tree, "int8") < payload_bytes(tree, "fp16") \
             < payload_bytes(tree, "none")
+
+
+@given(st.integers(1, 2000), st.floats(1e-3, 1e3), st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_int4_stochastic_error_bounded_per_block(n, scale, seed):
+    """int4 stochastic rounding never errs by more than one step (= the
+    per-block scale) on any element, for any rounding key."""
+    from repro.dist.wire import get_format
+    rng = np.random.default_rng(n + seed)
+    x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    fmt = get_format("int4")
+    p = fmt.encode(x, rng=jax.random.PRNGKey(seed))
+    xr = fmt.decode(p, x.shape, x.dtype)
+    err = np.abs(np.asarray(x - xr))
+    step = np.repeat(np.asarray(p["scales"]), 256)[:n]
+    assert np.all(err <= step + 1e-6)
+    assert p["q"].dtype == jnp.int8
+    assert np.abs(np.asarray(p["q"])).max() <= 7
+
+
+@given(st.integers(8, 256), st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_int4_stochastic_rounding_unbiased(n, seed):
+    """E[decode(encode(x))] = x: averaging reconstructions over many
+    independent rounding keys converges on x itself (a deterministic
+    floor/round would leave a fixed bias of up to one step)."""
+    from repro.dist.wire import get_format
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1.0, n), jnp.float32)
+    fmt = get_format("int4")
+    keys = jax.random.split(jax.random.PRNGKey(seed), 256)
+    recs = jax.vmap(
+        lambda k: fmt.decode(fmt.encode(x, rng=k), x.shape, x.dtype))(keys)
+    mean_err = np.abs(np.asarray(jnp.mean(recs, 0) - x))
+    step = np.repeat(np.asarray(fmt.encode(x)["scales"]), 256)[:n]
+    # se of the mean is <= step/2/sqrt(256) = step/32; allow 8 sigma —
+    # far under the ~0.5-step mean bias a deterministic floor would leave
+    assert np.all(mean_err <= step * 0.25 + 1e-6)
+
+
+@given(st.integers(9, 5000))
+@settings(max_examples=25, deadline=None)
+def test_int4_payload_bytes_below_int8(n):
+    from repro.dist.compression import payload_bytes
+    tree = {"g": jnp.zeros((n,), jnp.float32)}
+    nblocks = -(-n // 256)
+    assert payload_bytes(tree, "int4") == -(-n // 2) + 4 * nblocks
+    assert payload_bytes(tree, "int4") < payload_bytes(tree, "int8")
 
 
 @given(st.integers(2, 600), st.integers(0, 2 ** 16))
