@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test collect quickstart bench-smoke
+.PHONY: test collect quickstart bench-smoke elastic-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -22,3 +22,14 @@ quickstart:
 # this before it can skew the paper's §V-B communication numbers.
 bench-smoke:
 	python benchmarks/comm_overhead.py --smoke
+
+# Failure-path gate (DESIGN.md §7): the in-flight pod-shrink demo (drop-pod
+# bit-identity + survivor data re-split + checkpoint restart) and the
+# elastic dryrun (masked round == reduced-size round, compress step still
+# collective-free on the survivors' mesh).  Small forced device counts so
+# it runs on every `make`-level check, not just when someone remembers the
+# env var.
+elastic-smoke:
+	REPRO_ELASTIC_DEVICES=8 python -m repro.launch.elastic
+	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --drop-pod \
+	    --out results/dryrun_opt/hermes_elastic_smoke.json

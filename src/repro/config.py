@@ -268,6 +268,13 @@ class HermesConfig:
     # and also governs the config-free flat quantize helpers — so CPU CI
     # can exercise the kernel path in interpret mode.
     kernel_dispatch: str = "auto"  # auto | on | off
+    # elastic membership (DESIGN.md §7).  A member that stops responding is
+    # declared dead after failure_timeout_factor x the typical iteration
+    # time (the Level-A barrier detection stall and the Level-B liveness
+    # monitor share the knob); a resize may never shrink the membership
+    # below min_live_pods.
+    failure_timeout_factor: float = 3.0
+    min_live_pods: int = 1
 
     def validate(self) -> None:
         # lazy import: repro.dist imports this module at load time
@@ -278,6 +285,8 @@ class HermesConfig:
         assert self.kernel_dispatch in ("auto", "on", "off"), \
             self.kernel_dispatch
         assert self.window >= 1 and self.lam >= 1
+        assert self.failure_timeout_factor > 0.0, self.failure_timeout_factor
+        assert self.min_live_pods >= 1, self.min_live_pods
 
 
 @dataclass(frozen=True)

@@ -96,19 +96,28 @@ class CommModel:
 
 
 class Meter:
-    """API-call / byte accounting (paper counts every PS contact)."""
+    """API-call / byte accounting (paper counts every PS contact).
+
+    Every call is also recorded as a ``(t, worker, kind, nbytes)`` event
+    (``t`` is the simulated time the caller passes, or None for untimed
+    contexts), so failure-path tests can assert that nothing is ever
+    billed to a worker at or after its death time.
+    """
 
     def __init__(self):
         self.api_calls: Dict[str, int] = {}
         self.bytes: float = 0.0
         self.calls_by_kind: Dict[str, int] = {}
         self.bytes_by_kind: Dict[str, float] = {}
+        self.events: List[Tuple[Optional[float], str, str, float]] = []
 
-    def call(self, worker: str, kind: str, nbytes: float = 0.0, n: int = 1):
+    def call(self, worker: str, kind: str, nbytes: float = 0.0, n: int = 1,
+             t: Optional[float] = None):
         self.api_calls[worker] = self.api_calls.get(worker, 0) + n
         self.calls_by_kind[kind] = self.calls_by_kind.get(kind, 0) + n
         self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + nbytes
         self.bytes += nbytes
+        self.events.append((t, worker, kind, float(nbytes)))
 
     @property
     def total_calls(self) -> int:

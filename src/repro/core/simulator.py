@@ -58,6 +58,10 @@ class RunResult:
     alloc_trace: List[Tuple[float, str, int, int]]   # (t, worker, dss, mbs)
     calls_by_kind: Dict[str, int]
     bytes_by_kind: Dict[str, float]
+    # every metered PS contact as (sim_t, worker, kind, nbytes) — the
+    # failure-path audit trail (nothing may be billed at/after a death)
+    meter_events: List[Tuple[Optional[float], str, str, float]] = \
+        dataclasses.field(default_factory=list)
 
     def wi_table(self) -> Dict[str, float]:
         return {}
@@ -69,7 +73,8 @@ class _Env:
     def __init__(self, bundle: ModelBundle, *, num_workers: int,
                  hermes_cfg: Optional[HermesConfig], seed: int,
                  init_alloc: Allocation, noniid: bool,
-                 compression: str = "none"):
+                 compression: str = "none",
+                 failure_timeout_factor: float = 3.0):
         self.bundle = bundle
         self.seed = seed
         self.rng = np.random.default_rng(seed)
@@ -79,13 +84,20 @@ class _Env:
         self.loss_j, self.acc_j = _make_eval(bundle)
         self.comm = CommModel()
         self.meter = Meter()
+        self.failure_timeout_factor = failure_timeout_factor
         self.specs = default_cluster(num_workers, seed=seed)
-        n_train = len(next(iter(bundle.train_data.values())))
+        self.n_train = n_train = len(next(iter(bundle.train_data.values())))
+        self.noniid = noniid
         if noniid:
             parts = dirichlet_partition(bundle.train_data["labels"],
                                         num_workers, seed=seed)
         else:
             parts = iid_partition(n_train, num_workers, seed=seed)
+        # each worker's full partition; non-IID reallocation must redraw
+        # from HERE, not from the global train set, or a Dirichlet-skewed
+        # worker silently becomes IID again (IID redraws keep the whole
+        # train set as their pool — the split carries no distribution)
+        self.parts: List[np.ndarray] = [np.asarray(p) for p in parts]
         self.workers: List[EdgeWorker] = []
         for i, spec in enumerate(self.specs):
             shard = parts[i]
@@ -96,7 +108,7 @@ class _Env:
             self.workers.append(w)
             # initial dataset transfer from the PS
             self.meter.call(spec.name, "data",
-                            take * self._sample_bytes())
+                            take * self._sample_bytes(), t=0.0)
         # evaluation batches
         te = bundle.test_data
         n_test = len(te["labels"])
@@ -120,6 +132,21 @@ class _Env:
     def dead(self, worker: "EdgeWorker", at_time: float) -> bool:
         t = self.failures.get(worker.spec.name)
         return t is not None and at_time >= t
+
+    def partition_cap(self, i: int) -> int:
+        """Max samples worker ``i`` can be allocated: its Dirichlet
+        partition size when non-IID, the whole train set when IID."""
+        return len(self.parts[i]) if self.noniid else self.n_train
+
+    def redraw_indices(self, i: int, dss: int) -> np.ndarray:
+        """Redraw worker ``i``'s shard for a new allocation.  Non-IID
+        redraws come from the worker's own partition, preserving the class
+        skew; IID redraws come from the full train set (pre-existing
+        semantics — the IID split is bookkeeping, not a distribution)."""
+        pool = (self.parts[i] if self.noniid
+                else np.arange(self.n_train))
+        take = min(dss, len(pool))
+        return np.sort(self.rng.choice(pool, size=take, replace=False))
 
     def worker_eval_loss(self, params) -> float:
         return float(self.loss_j(params, self.eval_batch))
@@ -180,15 +207,20 @@ def run_framework(framework: str, bundle: ModelBundle, *,
                   failures: Optional[Dict[str, float]] = None) -> RunResult:
     """``failures``: {worker_name: sim_time} — the node dies (stops
     responding) at that simulated time.  Asynchronous frameworks tolerate
-    this natively (dead workers simply stop contributing); barrier
-    frameworks (BSP/EBSP) exclude a worker after it exceeds the failure
-    detection timeout (3x the expected iteration time)."""
+    this natively (dead workers simply stop contributing); BSP excludes a
+    worker once it misses the barrier, after the failure detection timeout
+    (``hermes_cfg.failure_timeout_factor`` x the typical iteration time —
+    the detection stall and the survivors' compute elapse concurrently, so
+    the barrier pays their max, not their sum).  EBSP has no failure path:
+    it models the paper's benchmark-then-schedule baseline only, so pass
+    ``failures`` to bsp/asp/ssp/selsync/hermes runs."""
     hermes_cfg = hermes_cfg or HermesConfig()
     compression = hermes_cfg.compression if framework == "hermes" else "none"
     env = _Env(bundle, num_workers=num_workers,
                hermes_cfg=hermes_cfg if framework == "hermes" else None,
                seed=seed, init_alloc=init_alloc, noniid=noniid,
-               compression=compression)
+               compression=compression,
+               failure_timeout_factor=hermes_cfg.failure_timeout_factor)
     stop = _StopCfg(target_acc, max_iterations, max_sim_time, max_wall,
                     eval_every, patience)
     env.failures = failures or {}
@@ -211,6 +243,21 @@ def run_framework(framework: str, bundle: ModelBundle, *,
 # BSP
 # ---------------------------------------------------------------------------
 
+def _bsp_barrier(sim_t: float, durations: List[float], typical: float,
+                 any_dead: bool, factor: float) -> float:
+    """When a superstep loses a node, the *survivors'* compute and the
+    failure-detection timeout elapse concurrently: the barrier releases
+    at whichever finishes last, not at their sum (the old accounting
+    charged ``factor * typical`` on top of ``max(durations)``, billing the
+    survivors' compute twice).  ``durations`` must be the surviving
+    workers' durations — a dead node never finishes its iteration, so its
+    phantom compute must not stretch the barrier either."""
+    barrier = sim_t + max(durations)
+    if any_dead:
+        barrier = max(barrier, sim_t + factor * typical)
+    return barrier
+
+
 def _run_bsp(env: _Env, stop: _StopCfg) -> RunResult:
     t0 = _time.time()
     w_global = env.params0
@@ -228,33 +275,50 @@ def _run_bsp(env: _Env, stop: _StopCfg) -> RunResult:
         alive = [w for w in env.workers if w.spec.name not in excluded]
         if not alive:
             break
+        dur: Dict[str, float] = {}
         for w in alive:
             w.params = w_global
             w.mom = jax.tree.map(jnp.zeros_like, w.mom)
             d = w.sim_iteration_time(eval_n)
             durations.append(d)
+            dur[w.spec.name] = d
             itimes[w.spec.name].append(d)
             w.run_local_iteration(env.step_fn, env.loss_j,
                                   {k: v for k, v in env.eval_batch.items()})
             w.clock = sim_t + d
-        # failure detection: a node that died mid-iteration stalls the
-        # barrier for the detection timeout (3x expected), then is excluded
+        # failure detection: a node that dies before reaching the barrier
+        # stalls it for the detection timeout, then is excluded.  The stall
+        # and the survivors' compute elapse concurrently, and a dead node's
+        # phantom compute never extends the barrier (_bsp_barrier), so the
+        # barrier is re-derived from the survivors until it settles: each
+        # pass can only exclude more workers, so it terminates.  A node
+        # dying inside the stall window also never reaches the barrier and
+        # must not be billed a push it never sent.
         typical = float(np.median(durations))
-        newly_dead = [w for w in alive if env.dead(w, sim_t + typical)]
-        if newly_dead:
-            sim_t += 3.0 * typical  # detection timeout paid by EVERYONE
+        any_dead = False
+        barrier = sim_t + max(dur[w.spec.name] for w in alive)
+        while True:
+            newly_dead = [w for w in alive if env.dead(w, barrier)]
+            if not newly_dead:
+                break
+            any_dead = True
             for w in newly_dead:
                 excluded.add(w.spec.name)
             alive = [w for w in alive if w.spec.name not in excluded]
             if not alive:
                 break
-        barrier = sim_t + max(durations)          # wait for the straggler
-        # push gradients + pull model (everyone, every superstep)
+            barrier = _bsp_barrier(sim_t,
+                                   [dur[w.spec.name] for w in alive],
+                                   typical, True,
+                                   env.failure_timeout_factor)
+        if not alive:
+            break
+        # push gradients + pull model (every survivor, every superstep)
         push_t = env.comm.time(env.params_bytes)
         pull_t = env.comm.time(env.params_bytes)
         for w in alive:
-            env.meter.call(w.spec.name, "push", env.params_bytes)
-            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            env.meter.call(w.spec.name, "push", env.params_bytes, t=barrier)
+            env.meter.call(w.spec.name, "pull", env.params_bytes, t=barrier)
             w.model_pulls += 1
         w_global = _mean_params([w.params for w in alive])
         sim_t = barrier + push_t + pull_t
@@ -331,15 +395,15 @@ def _run_async(env: _Env, stop: _StopCfg, *, mode: str, ssp_s: int = 125,
             do_sync = rel > selsync_delta
 
         if do_sync:
-            env.meter.call(w.spec.name, "push", env.params_bytes)
+            env.meter.call(w.spec.name, "push", env.params_bytes, t=sim_t)
             w_global = _delta_apply(w_global, pulled[i], w.params)
             ps_updates += 1
-            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            env.meter.call(w.spec.name, "pull", env.params_bytes, t=sim_t)
             w.refresh(w_global)
             pulled[i] = w_global
             comm = env.comm.time(env.params_bytes) * 2
         else:
-            env.meter.call(w.spec.name, "telemetry", 128)
+            env.meter.call(w.spec.name, "telemetry", 128, t=sim_t)
             comm = 0.0
 
         d = w.sim_iteration_time(eval_n)
@@ -384,7 +448,7 @@ def _run_ebsp(env: _Env, stop: _StopCfg, *, lookahead: int) -> RunResult:
         for _ in range(3):
             bt += w.sim_iteration_time(eval_n)
         ewma[i] = bt / 3
-        env.meter.call(w.spec.name, "benchmark", 1024, n=3)
+        env.meter.call(w.spec.name, "benchmark", 1024, n=3, t=0.0)
     sim_t += max(ewma.values())
 
     while True:
@@ -415,8 +479,8 @@ def _run_ebsp(env: _Env, stop: _StopCfg, *, lookahead: int) -> RunResult:
                 itimes[w.spec.name].append(d)
                 ewma[i] = 0.7 * ewma[i] + 0.3 * d
                 w.run_local_iteration(env.step_fn, env.loss_j, env.eval_batch)
-            env.meter.call(w.spec.name, "push", env.params_bytes)
-            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            env.meter.call(w.spec.name, "push", env.params_bytes, t=T)
+            env.meter.call(w.spec.name, "pull", env.params_bytes, t=T)
             w.model_pulls += 1
         w_global = _mean_params([w.params for w in env.workers])
         ps_updates += 1
@@ -457,8 +521,7 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
     last_alloc_check = 0.0
     latest_times: Dict[str, float] = {}
     prefetch_ready: Dict[int, float] = {}
-    n_train = len(next(iter(env.bundle.train_data.values())))
-    rng = env.rng
+    n_train = env.n_train
     w_global = env.params0
     comp_err: Dict[int, Tree] = {}   # per-worker error-feedback residual
     # stochastic-format dither stream; seed-derived so replicate runs with
@@ -478,11 +541,15 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
         sim_t, i, _ = heapq.heappop(heap)
         w = env.workers[i]
         if env.dead(w, sim_t):
-            continue  # failed node: its pushes simply stop arriving
+            # failed node: its pushes simply stop arriving, and its stale
+            # iteration time must leave the allocator's observation set or
+            # the sweep keeps feeding a node that will never run again
+            latest_times.pop(w.spec.name, None)
+            continue
         w.clock = sim_t
         loss = w.run_local_iteration(env.step_fn, env.loss_j, env.eval_batch)
         latest_times[w.spec.name] = itimes[w.spec.name][-1]
-        env.meter.call(w.spec.name, "telemetry", 64)
+        env.meter.call(w.spec.name, "telemetry", 64, t=sim_t)
         push, _ = gup_update(w.gup, loss)
         gup_trace.append((sim_t, w.spec.name, loss, push))
 
@@ -505,38 +572,51 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
                 if hcfg.error_feedback:
                     comp_err[i] = residual
                 comp_pushes += 1
-            env.meter.call(w.spec.name, "push", env.push_wire_bytes, n=1)
+            env.meter.call(w.spec.name, "push", env.push_wire_bytes, n=1,
+                           t=sim_t)
             arrive = sim_t + env.comm.time(env.push_wire_bytes)
             start = max(arrive, ps_busy_until)
             ps, w_global, _m = ps_push(ps, G, ps_eval)
             ps_time = 0.004 * _m["evals"] * max(1.0, eval_n / 64)
             ps_busy_until = start + ps_time
-            env.meter.call(w.spec.name, "pull", env.params_bytes)
+            env.meter.call(w.spec.name, "pull", env.params_bytes, t=sim_t)
             back = ps_busy_until + env.comm.time(env.params_bytes)
             w.refresh(w_global)
             w.mom = jax.tree.map(jnp.zeros_like, w.mom)
             next_start = back
 
-        # allocator sweep (asynchronous monitoring)
+        # allocator sweep (asynchronous monitoring).  Dead workers drop out
+        # of the sweep entirely: a failed worker's stale latest_times entry
+        # would keep skewing the IQR fences, and reallocating one would
+        # bill dataset bytes to a node that will never run again.
         if sim_t - last_alloc_check >= alloc_every and len(latest_times) >= 4:
             last_alloc_check = sim_t
-            allocs = {x.spec.name: x.alloc for x in env.workers}
-            mem = {x.spec.name: x.spec.mem_limit_dss for x in env.workers}
+            for x in env.workers:
+                if env.dead(x, sim_t):
+                    latest_times.pop(x.spec.name, None)
+            live = [x for x in env.workers if not env.dead(x, sim_t)]
+            allocs = {x.spec.name: x.alloc for x in live}
+            mem = {x.spec.name: x.spec.mem_limit_dss for x in live}
             new = reallocate(latest_times, allocs, hcfg,
-                             dss_domain=(32, max(64, n_train // len(env.workers))),
+                             dss_domain=(32, max(64, n_train // max(1, len(live)))),
                              mem_limit_dss=mem)
             for j, x in enumerate(env.workers):
-                if x.spec.name in new:
+                if x.spec.name in new and not env.dead(x, sim_t):
                     a = new[x.spec.name]
-                    idx = rng.choice(n_train, size=min(a.dss, n_train),
-                                     replace=False)
-                    x.set_allocation(a, np.sort(idx))
+                    # redraw from the worker's redraw pool: a Dirichlet
+                    # shard must stay a Dirichlet shard after reallocation.
+                    # Clamp dss to what the pool actually holds so the
+                    # cost model and alloc_trace never bill phantom samples.
+                    cap = env.partition_cap(j)
+                    if a.dss > cap:
+                        a = Allocation(cap, a.mbs)
+                    idx = env.redraw_indices(j, a.dss)
+                    x.set_allocation(a, idx)
                     alloc_trace.append((sim_t, x.spec.name, a.dss, a.mbs))
-                    env.meter.call(x.spec.name, "data",
-                                   a.dss * env._sample_bytes())
+                    xfer = len(idx) * env._sample_bytes()
+                    env.meter.call(x.spec.name, "data", xfer, t=sim_t)
                     # prefetch: transfer overlaps with compute
-                    prefetch_ready[j] = sim_t + env.comm.time(
-                        a.dss * env._sample_bytes())
+                    prefetch_ready[j] = sim_t + env.comm.time(xfer)
 
         # next iteration (wait for prefetch only if it hasn't landed)
         if i in prefetch_ready:
@@ -586,4 +666,5 @@ def _result(name: str, env: _Env, sim_t: float, t0: float, acc_best: float,
         alloc_trace=alloc_trace,
         calls_by_kind=dict(env.meter.calls_by_kind),
         bytes_by_kind=dict(env.meter.bytes_by_kind),
+        meter_events=list(env.meter.events),
     )

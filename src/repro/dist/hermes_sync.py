@@ -83,6 +83,7 @@ def _merge_recv(w_global, recv, w1, w2, denom, any_push, use_kernel):
 
 def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
                  w_global: Tree, L: jnp.ndarray, *,
+                 live: Optional[jnp.ndarray] = None,
                  compression: str = "none", error: Optional[Tree] = None,
                  use_kernel: bool = False, rng=None,
                  track_error: bool = True
@@ -93,6 +94,13 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
       pod_params: pytree whose leaves are (n_pods, ...) stacked local models.
       gates:      (n_pods,) bool — which pods push this round.
       losses:     (n_pods,) fp32 eval losses (the paper's L_temp per pod).
+      live:       optional (n_pods,) bool membership mask.  Dead pods are
+        zeroed out of the gates — and therefore out of every wire payload,
+        merge weight, and refresh — through the same ``_gate_zero``
+        machinery that protects against diverged replicas, so a dead pod's
+        nonfinite leaves cannot poison the global model.  Restricted to the
+        live rows, a masked merge is bit-identical to the same merge run at
+        the smaller pod count (``tests/test_elastic_membership.py``).
       w_global:   unstacked global-model pytree.
       L:          scalar eval loss of the current global model.
       compression: wire-format name from the :mod:`repro.dist.wire`
@@ -115,6 +123,8 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
     on a fully closed round the global model is returned bit-identical.
     """
     gates = gates.astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
     any_push = jnp.any(gates)
     w1 = 1.0 / jnp.maximum(jnp.asarray(L, jnp.float32), _EPS)
     w2 = jnp.where(gates,
@@ -190,6 +200,7 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
 
 def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
                  w_global: Tree, L: jnp.ndarray, cfg: HermesConfig, *,
+                 live: Optional[jnp.ndarray] = None,
                  error: Optional[Tree] = None,
                  use_kernel: Optional[bool] = None,
                  rng=None) -> Dict[str, Any]:
@@ -198,6 +209,15 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
     The gate is the vmapped device twin of ``core.gup.gup_update`` (same
     z-score, alpha decay, and ring-buffer bookkeeping), so a Level-B run
     opens its gates on exactly the rounds the Level-A host simulator would.
+
+    ``live`` is the elastic-membership mask (DESIGN.md §7): a dead pod's
+    gate is forced shut, so it contributes nothing to the wire, the merge,
+    or ``any_push`` — even when its replica or loss has gone nonfinite —
+    and the returned ``gates`` reflect the masked values.  The per-pod GUP
+    states still advance independently (they are vmapped), so a survivor's
+    gate trajectory is unchanged by dead peers; the host resize path
+    (``launch/elastic.py``) later drops the dead rows from every
+    pod-stacked tree.
 
     The merge is wrapped in ``jax.lax.cond`` on ``any_push``: the gate
     reduction is one scalar, and a fully closed round takes the identity
@@ -215,7 +235,10 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
             getattr(cfg, "kernel_dispatch", "auto"))
     gates, new_gup = jax.vmap(
         lambda s, x: gup_gate_jax(s, x, cfg))(gup_state, pod_losses)
-    any_push = jnp.any(gates.astype(bool))
+    gates = gates.astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
+    any_push = jnp.any(gates)
     err_in = error if cfg.error_feedback else None
     # hermes_merge tracks a residual for every non-"none" format (lossless
     # ones just carry exact zeros), so the closed branch must mirror that

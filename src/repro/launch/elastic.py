@@ -1,10 +1,26 @@
-"""Elastic restart demo: checkpoint -> "node failure" -> resume on a smaller
-mesh with re-sharded state and re-balanced batch allocation.
+"""Elastic membership: survive node/pod loss and resume on a smaller mesh.
 
-This is the fault-tolerance path a 1000-node deployment needs: the
-checkpoint is mesh-agnostic (host npz + manifest), restore device_puts onto
-whatever mesh survives, and the Hermes allocator re-splits the global batch
-for the new capacity.  Run under 8 virtual devices:
+Two resize paths live here (DESIGN.md §7):
+
+* **Checkpoint restart** (``run_demo``): checkpoint -> "node failure" ->
+  restore onto a smaller (data, model) mesh with re-sharded state and a
+  re-balanced batch allocation.  This is the coarse path — any state
+  survives anything, at the cost of a full restore.
+
+* **In-flight pod shrink** (``elastic_shrink`` + ``drop_pod_equivalence``):
+  the Level-B Hermes state is *pod-stacked* (leading ``(n_pods,)`` axis on
+  pod_params, GUP ring buffers, and error-feedback residuals), so losing a
+  pod is an index migration, not a restart: drop the dead rows from every
+  stacked tree (``shrink_pod_tree``), rebuild the mesh from the surviving
+  pods' devices (``launch.mesh.shrink_mesh``), device_put the survivors
+  onto it, and re-split the data shards via ``core.allocator.reallocate``
+  (``survivor_allocations``).  Between failure detection and the shrink,
+  ``hermes_round(live=...)`` masks the dead pod out of gates/wire/merge,
+  so the two representations are bit-identical for the survivors —
+  ``drop_pod_equivalence`` asserts exactly that, and
+  ``launch/hermes_dryrun.py --drop-pod`` runs it at the production mesh.
+
+Run both demos under 8 virtual devices:
 
     REPRO_ELASTIC_DEVICES=8 python -m repro.launch.elastic
 """
@@ -15,19 +31,285 @@ if os.environ.get("REPRO_ELASTIC_DEVICES"):
 
 import json
 import tempfile
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from repro.config import ShapeConfig, OptimizerConfig, ParallelConfig
+from repro.config import (
+    HermesConfig, ShapeConfig, OptimizerConfig, ParallelConfig,
+)
 from repro.configs import get_smoke_config
 from repro.checkpoint import Checkpointer
-from repro.core.allocator import dual_binary_search
-from repro.dist.sharding import param_sharding_tree
-from repro.launch.mesh import arch_rules
+from repro.core.allocator import Allocation, dual_binary_search, reallocate
+from repro.dist.hermes_sync import hermes_pod_state, hermes_round
+from repro.launch.mesh import arch_rules, make_pod_mesh, shrink_mesh
 from repro.launch.steps import build_setup
 
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pod-stacked state migration
+# ---------------------------------------------------------------------------
+
+def shrink_pod_tree(tree: Tree, keep: Sequence[int]) -> Tree:
+    """Drop dead pods from a pod-stacked pytree: every leaf keeps only the
+    ``keep`` rows of its leading (n_pods,) axis, in ``keep`` order.
+
+    This is the whole GUP-state migration: ring buffers, alpha/n_iter
+    counters, error-feedback residuals, and the model replicas themselves
+    all carry their pod identity in axis 0, so surviving state moves by
+    index and nothing is re-derived.
+    """
+    if tree is None:
+        return None
+    idx = jnp.asarray(list(keep), jnp.int32)
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
+# state keys elastic_shrink treats as pod-stacked (leading n_pods axis)
+POD_STACKED_KEYS = ("pod_params", "gup", "error")
+
+
+def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
+                   mesh: Optional[Mesh], *,
+                   cfg: Optional[HermesConfig] = None,
+                   specs: Optional[Dict[str, Any]] = None
+                   ) -> Tuple[Dict[str, Any], Optional[Mesh]]:
+    """Resize the Level-B Hermes state from ``n_pods`` to ``len(keep)``.
+
+    ``state`` holds the pod-stacked trees (any of ``POD_STACKED_KEYS``;
+    ``None`` entries pass through) plus optionally unstacked globals under
+    other keys (moved as-is).  With a ``mesh``, every output is re-sharded
+    onto the survivors' mesh (``shrink_mesh``) using the PartitionSpec
+    pytrees in ``specs`` (absent keys replicate); ``mesh=None`` skips
+    placement entirely (single-device / host use).  Refuses to shrink
+    below ``cfg.min_live_pods``.  Returns ``(new_state, survivors_mesh)``.
+    """
+    cfg = cfg or HermesConfig()
+    keep = list(keep)
+    if len(keep) < cfg.min_live_pods:
+        raise ValueError(
+            f"shrinking to {len(keep)} pods violates min_live_pods="
+            f"{cfg.min_live_pods}")
+    new_mesh = shrink_mesh(mesh, keep) if mesh is not None else None
+
+    def _put(tree, spec_tree):
+        if tree is None or new_mesh is None:
+            return tree
+        if spec_tree is None:
+            sh = NamedSharding(new_mesh, PS())
+            return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+        return jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(new_mesh, sp)),
+            tree, spec_tree)
+
+    out: Dict[str, Any] = {}
+    for k, v in state.items():
+        v = shrink_pod_tree(v, keep) if k in POD_STACKED_KEYS else v
+        out[k] = _put(v, (specs or {}).get(k))
+    return out, new_mesh
+
+
+def survivor_allocations(times: Dict[str, float],
+                         allocs: Dict[str, Allocation],
+                         dead: Sequence[str], cfg: HermesConfig, *,
+                         n_train: int,
+                         mem_limit_dss: Optional[Dict[str, int]] = None
+                         ) -> Dict[str, Allocation]:
+    """Re-split the data shards for the survivors of a membership change.
+
+    Dead members are dropped from the observation set *before* the IQR
+    sweep (a stale entry would otherwise keep skewing the fences and keep
+    billing transfers to a node that will never run again — the Level-A
+    bug this PR fixes), then ``core.allocator.reallocate`` re-sizes the
+    survivors toward the new cluster median.  Returns a full allocation
+    map covering every survivor (resized or carried over) and no dead one.
+    """
+    dead_set = set(dead)
+    live_times = {k: v for k, v in times.items() if k not in dead_set}
+    live_allocs = {k: v for k, v in allocs.items() if k not in dead_set}
+    dss_hi = max(64, n_train // max(1, len(live_times)))
+    new = reallocate(live_times, live_allocs, cfg,
+                     dss_domain=(32, dss_hi),
+                     mem_limit_dss={k: v for k, v in
+                                    (mem_limit_dss or {}).items()
+                                    if k not in dead_set})
+    return {**live_allocs, **new}
+
+
+# ---------------------------------------------------------------------------
+# Drop-pod equivalence harness (shared with launch/hermes_dryrun.py)
+# ---------------------------------------------------------------------------
+
+def _toy_pod_state(n_pods: int, cfg: HermesConfig, seed: int = 0
+                   ) -> Tuple[Tree, Tree, Tree]:
+    """Per-pod-distinct toy replicas: one blocked leaf, one padded leaf."""
+    k1, k2, kg = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pod_params = {
+        "w": jax.random.normal(k1, (n_pods, 4, 512), jnp.float32),
+        "b": jax.random.normal(k2, (n_pods, 7), jnp.float32),
+    }
+    w_global = {"w": jax.random.normal(kg, (4, 512), jnp.float32),
+                "b": jnp.zeros((7,), jnp.float32)}
+    return pod_params, w_global, hermes_pod_state(cfg, n_pods)
+
+
+def _demo_losses(n_pods: int, r: int) -> np.ndarray:
+    """Deterministic per-pod loss schedule with sharp per-pod drops so the
+    z-score gates open on different rounds for different pods."""
+    base = 1.0 + 0.05 * np.cos(np.arange(n_pods) + r)
+    drop = (np.arange(n_pods) + 3 == r % 7).astype(np.float64) * 0.8
+    return (base - drop).astype(np.float32)
+
+
+def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
+                         rounds_before: int = 4, rounds_after: int = 4,
+                         mesh: Optional[Mesh] = None,
+                         cfg: Optional[HermesConfig] = None,
+                         seed: int = 0) -> Dict[str, Any]:
+    """Kill pod ``drop`` mid-run; prove the survivors never notice.
+
+    Path A (what production does): run ``rounds_before`` full-membership
+    rounds, poison the dead pod with NaNs, run one masked round
+    (``live[drop] = False``), ``elastic_shrink`` to the survivors' mesh,
+    then ``rounds_after`` rounds at the reduced pod count.
+
+    Path B (the oracle): shrink *at the moment of death* and run the same
+    rounds at the smaller size from the start.
+
+    Every surviving tensor — pod_params, w_global, GUP ring buffers, and
+    the error-feedback residual — must match **bit-identically** between
+    the two paths, which is exactly the claim that a masked round zeroes
+    the dead pod out of gates, wire payloads, and merge weights.
+
+    ``mesh=None`` auto-builds a (pod, data, model) mesh when enough
+    devices exist, else runs unplaced on the default device (the math is
+    placement-independent; tier-1 exercises this path on one CPU device).
+    """
+    cfg = cfg or HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                              compression="int8")
+    assert 0 <= drop < n_pods and n_pods >= 2
+    keep = [i for i in range(n_pods) if i != drop]
+    if mesh is None and jax.device_count() >= n_pods:
+        mesh = make_pod_mesh(n_pods)
+    pod_spec = PS("pod")
+
+    def put(tree, m, spec):
+        if m is None:
+            return tree
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(m, spec)), tree)
+
+    def pod_specs(tree):
+        return jax.tree.map(lambda _: pod_spec, tree)
+
+    def rounds(pods, gup, err, wg, n, start, *, live=None):
+        # placement rides on the committed inputs; no mesh context needed
+        step = jax.jit(
+            lambda p, g, e, w, losses, lv: hermes_round(
+                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e))
+        np_ = jax.tree.leaves(pods)[0].shape[0]
+        lv = (np.ones((np_,), bool) if live is None
+              else np.asarray(live, bool))
+        for r in range(start, start + n):
+            full = _demo_losses(n_pods, r)
+            losses = full if np_ == n_pods else full[np.asarray(keep)]
+            losses = np.where(lv, losses, np.nan)  # dead pods go dark
+            out = step(pods, gup, err, wg, jnp.asarray(losses),
+                       jnp.asarray(lv))
+            pods, gup, err, wg = (out["pod_params"], out["gup"],
+                                  out["error"], out["w_global"])
+        return pods, gup, err, wg
+
+    # common prefix: full membership
+    pods0, wg0, gup0 = _toy_pod_state(n_pods, cfg, seed)
+    pods = put(pods0, mesh, pod_spec)
+    gup = put(gup0, mesh, pod_spec)
+    wg = put(wg0, mesh, PS())
+    pods, gup, err, wg = rounds(pods, gup, None, wg, rounds_before, 0)
+    snap = {"pods": jax.tree.map(np.asarray, pods),
+            "gup": jax.tree.map(np.asarray, gup),
+            "err": jax.tree.map(np.asarray, err),
+            "wg": jax.tree.map(np.asarray, wg)}
+
+    # path A: pod `drop` dies (NaN replica), one masked round, then shrink
+    live = np.ones((n_pods,), bool)
+    live[drop] = False
+    dead_pods = jax.tree.map(lambda x: x.at[drop].set(jnp.nan), pods)
+    a_pods, a_gup, a_err, a_wg = rounds(
+        dead_pods, gup, err, wg, 1, rounds_before, live=live)
+    a_state, a_mesh = elastic_shrink(
+        {"pod_params": a_pods, "gup": a_gup, "error": a_err,
+         "w_global": a_wg},
+        keep, mesh, cfg=cfg,
+        specs={"pod_params": pod_specs(a_pods), "gup": pod_specs(a_gup),
+               "error": pod_specs(a_err)})
+    a_pods, a_gup, a_err, a_wg = rounds(
+        a_state["pod_params"], a_state["gup"], a_state["error"],
+        a_state["w_global"], rounds_after, rounds_before + 1)
+
+    # path B: shrink at the moment of death, replay the same rounds small
+    b_state, _ = elastic_shrink(
+        {"pod_params": jax.tree.map(jnp.asarray, snap["pods"]),
+         "gup": jax.tree.map(jnp.asarray, snap["gup"]),
+         "error": jax.tree.map(jnp.asarray, snap["err"]),
+         "w_global": jax.tree.map(jnp.asarray, snap["wg"])},
+        keep, mesh, cfg=cfg,
+        specs={"pod_params": pod_specs(snap["pods"]),
+               "gup": pod_specs(snap["gup"]),
+               "error": pod_specs(snap["err"])})
+    b_pods, b_gup, b_err, b_wg = rounds(
+        b_state["pod_params"], b_state["gup"], b_state["error"],
+        b_state["w_global"], 1 + rounds_after, rounds_before)
+
+    def check(name, a, b):
+        for x, y in zip(jax.tree.leaves(jax.tree.map(np.asarray, a)),
+                        jax.tree.leaves(jax.tree.map(np.asarray, b))):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"{name}: surviving state diverged after "
+                              f"the pod drop")
+
+    check("pod_params", a_pods, b_pods)
+    check("gup", a_gup, b_gup)
+    check("error", a_err, b_err)
+    check("w_global", a_wg, b_wg)
+    return {
+        "n_pods": n_pods, "dropped": drop, "survivors": keep,
+        "mesh": list(mesh.devices.shape) if mesh is not None else None,
+        "survivor_mesh": (list(a_mesh.devices.shape)
+                          if a_mesh is not None else None),
+        "rounds": rounds_before + 1 + rounds_after,
+        "compression": cfg.compression,
+        "bit_identical": True,
+    }
+
+
+def run_hermes_shrink_demo(n_pods: int = 4, drop: int = 1,
+                           seed: int = 0) -> Dict[str, Any]:
+    """The in-flight pod-shrink demo: drop-pod equivalence + data re-split."""
+    cfg = HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                       compression="int8", min_live_pods=1)
+    n_pods = max(2, min(n_pods, jax.device_count()))
+    drop = min(drop, n_pods - 1)
+    out = drop_pod_equivalence(n_pods=n_pods, drop=drop, cfg=cfg, seed=seed)
+    # the allocator re-splits the surviving members' data shards
+    times = {f"pod{i}": 1.0 + 0.4 * i for i in range(n_pods)}
+    allocs = {f"pod{i}": Allocation(256, 16) for i in range(n_pods)}
+    new = survivor_allocations(times, allocs, [f"pod{drop}"], cfg,
+                               n_train=4096)
+    assert f"pod{drop}" not in new
+    out["realloc"] = {k: {"dss": a.dss, "mbs": a.mbs}
+                      for k, a in sorted(new.items())}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-restart demo (the original coarse path)
+# ---------------------------------------------------------------------------
 
 def run_demo(arch: str = "qwen3-8b", steps_before: int = 5,
              steps_after: int = 5, seed: int = 0) -> dict:
@@ -96,4 +378,5 @@ def run_demo(arch: str = "qwen3-8b", steps_before: int = 5,
 
 
 if __name__ == "__main__":
-    print(json.dumps(run_demo(), indent=2))
+    print(json.dumps({"hermes_shrink": run_hermes_shrink_demo(),
+                      "checkpoint_restart": run_demo()}, indent=2))

@@ -13,6 +13,20 @@ gated merge is coherent at (2,16,16), and reports its roofline terms —
 including the closed-gate round, whose collective payload is one scalar.
 
     python -m repro.launch.hermes_dryrun [--arch qwen3-8b]
+
+``--drop-pod`` additionally exercises the elastic-membership path
+(DESIGN.md §7), in two parts: (1) it re-lowers the real architecture's
+compress step at the survivors' (n_pods-1, data, model) mesh and asserts
+it stays collective-free after the shrink; (2) it executes
+``launch.elastic.drop_pod_equivalence`` — kill a pod mid-run, masked
+round, shrink — on a small stand-in pod mesh (<= 8 devices; executing at
+512 virtual devices would be prohibitively slow) and asserts the
+surviving pods' ``hermes_round`` outputs are **bit-identical** to a fresh
+run at the reduced pod count.  The round math is placement-independent;
+the production-mesh *schedule* is what part (1) and the main lowering
+audit:
+
+    python -m repro.launch.hermes_dryrun --drop-pod [--arch qwen3-8b]
 """
 import argparse
 import json
@@ -25,18 +39,63 @@ from repro.config import HermesConfig
 from repro.configs import get_config
 from repro.dist.compression import encode_tree
 from repro.dist.hermes_sync import hermes_pod_state, hermes_round
-from repro.launch.mesh import arch_parallel_config, arch_rules, make_production_mesh
+from repro.launch.mesh import (
+    arch_parallel_config, arch_rules, make_pod_mesh, shrink_mesh,
+)
 from repro.launch.steps import abstract_init_lm, _shard_tree
 from repro.roofline.hlo_parse import parse_hlo_cost
+
+
+def _compress_audit(mesh, hcfg, abstract_params, base_shardings):
+    """Lower the compress step alone on ``mesh``; count its all-gathers.
+
+    The blocked wire layout is computed per shard — no leaf flatten — so
+    quantizing the pod-stacked delta must insert *zero* all-gathers (the
+    ROADMAP "Sharded compression" item; the elastic path re-checks this at
+    the survivors' mesh so a pod drop cannot regress it).
+    """
+    n_pods = mesh.devices.shape[0]
+    pod_params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype),
+        abstract_params)
+    pod_shardings = jax.tree.map(
+        lambda sh: NamedSharding(mesh, PS(*(("pod",) + sh.spec))),
+        base_shardings)
+    global_shardings = jax.tree.map(
+        lambda sh: NamedSharding(mesh, sh.spec), base_shardings)
+
+    def compress_fn(pod_p, w_g):
+        delta = jax.tree.map(lambda p, g: p - g[None], pod_p, w_g)
+        payloads, _, _ = encode_tree(delta, mode=hcfg.compression)
+        return payloads
+
+    with mesh:
+        cjit = jax.jit(compress_fn,
+                       in_shardings=(pod_shardings, global_shardings))
+        ccost = parse_hlo_cost(
+            cjit.lower(pod_params, abstract_params).compile().as_text())
+    n_ag = sum(v for k, v in ccost.collective_counts.items()
+               if "all-gather" in k)
+    assert n_ag == 0, (
+        f"shard-local compress step must not all-gather on "
+        f"{tuple(mesh.devices.shape)}, got {ccost.collective_counts}")
+    return ccost, n_ag, pod_shardings, global_shardings, pod_params
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--out", default="results/dryrun_opt/hermes_sync.json")
+    ap.add_argument("--drop-pod", action="store_true",
+                    help="elastic-membership audit: kill a pod mid-run, "
+                         "assert survivor bit-identity and a collective-"
+                         "free compress step at the reduced mesh")
+    ap.add_argument("--drop-pod-index", type=int, default=1)
     args = ap.parse_args()
 
-    mesh = make_production_mesh(multi_pod=True)
+    # (2, 16, 16) at the default 512 forced devices; REPRO_DRYRUN_DEVICES
+    # scales the (data, model) grid down so smoke runs stay cheap
+    mesh = make_pod_mesh(2)
     n_pods = mesh.devices.shape[0]
     cfg = get_config(args.arch)
     parallel = arch_parallel_config(args.arch)
@@ -49,15 +108,10 @@ def main() -> None:
         lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), abstract_params)
     base_shardings = _shard_tree(param_axes, rules)
 
-    # pod-stacked replicas: leading dim sharded over "pod"
-    pod_params = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype),
-        abstract_params)
-    pod_shardings = jax.tree.map(
-        lambda sh: NamedSharding(mesh, PS(*(("pod",) + sh.spec))),
-        base_shardings)
-    global_shardings = jax.tree.map(
-        lambda sh: NamedSharding(mesh, sh.spec), base_shardings)
+    # Collective-schedule audit of the compress step alone (ISSUE 2 /
+    # ROADMAP "Sharded compression") at the full production mesh.
+    ccost, n_ag, pod_shardings, global_shardings, pod_params = \
+        _compress_audit(mesh, hcfg, abstract_params, base_shardings)
 
     gup = hermes_pod_state(hcfg, n_pods)
     rep = NamedSharding(mesh, PS())
@@ -68,27 +122,7 @@ def main() -> None:
         out = hermes_round(pod_p, gup_state, pod_losses, w_global, L, hcfg)
         return out["pod_params"], out["w_global"], out["gup"], out["any_push"]
 
-    # Collective-schedule audit of the compress step alone (ISSUE 2 /
-    # ROADMAP "Sharded compression"): the blocked wire layout is computed
-    # per shard — no leaf flatten — so quantizing the pod-stacked delta must
-    # insert *zero* all-gathers.  The old flat layout collapsed every
-    # sharded axis and forced an all-gather per leaf before quantization.
-    def compress_fn(pod_p, w_g):
-        delta = jax.tree.map(lambda p, g: p - g[None], pod_p, w_g)
-        payloads, _, _ = encode_tree(delta, mode=hcfg.compression)
-        return payloads
-
     with mesh:
-        cjit = jax.jit(compress_fn,
-                       in_shardings=(pod_shardings, global_shardings))
-        ccost = parse_hlo_cost(
-            cjit.lower(pod_params, abstract_params).compile().as_text())
-        n_ag = sum(v for k, v in ccost.collective_counts.items()
-                   if "all-gather" in k)
-        assert n_ag == 0, (
-            f"shard-local compress step must not all-gather, got "
-            f"{ccost.collective_counts}")
-
         jitted = jax.jit(
             round_fn,
             in_shardings=(pod_shardings, gup_sh, rep, global_shardings, rep),
@@ -113,6 +147,37 @@ def main() -> None:
             "compress_collectives": ccost.collective_counts,
             "compress_all_gathers": n_ag,
         }
+
+    if args.drop_pod:
+        # lazy import: launch.elastic force-sets XLA flags only under
+        # REPRO_ELASTIC_DEVICES, so importing here is safe post-init
+        from repro.launch.elastic import drop_pod_equivalence
+
+        drop = args.drop_pod_index % n_pods
+        keep = [i for i in range(n_pods) if i != drop]
+        small = shrink_mesh(mesh, keep)
+
+        # 1. the lowered compress step stays collective-free at the
+        #    survivors' (n_pods-1, data, model) mesh
+        small_base = jax.tree.map(
+            lambda sh: NamedSharding(small, sh.spec), base_shardings)
+        small_cost, small_ag, _, _, _ = _compress_audit(
+            small, hcfg, abstract_params, small_base)
+
+        # 2. numeric bit-identity of the surviving pods' rounds, executed
+        #    on a small pod mesh (the math is mesh-size independent; the
+        #    full-size schedule is what the lowering above audits)
+        eq = drop_pod_equivalence(
+            n_pods=2, drop=1,
+            mesh=make_pod_mesh(2, max_devices=min(jax.device_count(), 8)))
+        rec["drop_pod"] = {
+            "dropped": drop,
+            "survivor_mesh": list(small.devices.shape),
+            "survivor_compress_collectives": small_cost.collective_counts,
+            "survivor_compress_all_gathers": small_ag,
+            "equivalence": eq,
+        }
+
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)

@@ -10,7 +10,9 @@ reshape; see DESIGN.md and the §Perf head-padding hillclimb).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 from jax.sharding import Mesh
@@ -23,6 +25,51 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def pod_mesh_shape(ndev: int, n_pods: int) -> Tuple[int, int, int]:
+    """Largest square-ish (pods, data, model) shape for ``ndev`` devices.
+
+    Per pod, the model axis is the largest power of two whose square fits
+    the per-pod device count; at 512 devices and 2 pods this is exactly the
+    (2, 16, 16) production mesh.  Raises when fewer than one device per pod
+    is available.
+    """
+    per_pod = ndev // n_pods
+    assert per_pod >= 1, f"{ndev} devices cannot host {n_pods} pods"
+    model = 1
+    while (model * 2) ** 2 <= per_pod:
+        model *= 2
+    return (n_pods, per_pod // model, model)
+
+
+def make_pod_mesh(n_pods: int, *, max_devices: int = 0) -> Mesh:
+    """A (pod, data, model) mesh over the first available devices.
+
+    Unlike ``jax.make_mesh`` this takes a device *subset*, so an elastic
+    run can stand up a smaller mesh than the full fleet (the survivors of
+    a pod loss).  ``max_devices`` caps the device count (0 = all).
+    """
+    devs = jax.devices()
+    if max_devices:
+        devs = devs[:max_devices]
+    shape = pod_mesh_shape(len(devs), n_pods)
+    n = shape[0] * shape[1] * shape[2]
+    return Mesh(np.asarray(devs[:n], dtype=object).reshape(shape),
+                ("pod", "data", "model"))
+
+
+def shrink_mesh(mesh: Mesh, keep_pods: Sequence[int]) -> Mesh:
+    """The survivors' mesh: same per-pod (data, model) grid, fewer pods.
+
+    ``keep_pods`` indexes the leading "pod" axis of ``mesh.devices``; the
+    selected pods' devices are reused verbatim so no live buffers have to
+    leave their device — only the dead pod's rows are dropped.
+    """
+    assert mesh.axis_names[0] == "pod", mesh.axis_names
+    keep = list(keep_pods)
+    assert keep, "cannot shrink a mesh to zero pods"
+    return Mesh(mesh.devices[np.asarray(keep)], mesh.axis_names)
 
 
 def mesh_axis_size(mesh: Mesh, name: str) -> int:

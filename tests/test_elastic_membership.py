@@ -1,0 +1,148 @@
+"""Elastic Hermes membership (DESIGN.md §7): liveness mask, pod-state
+migration, and the drop-pod bit-identity invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.allocator import Allocation
+from repro.dist.hermes_sync import (
+    hermes_merge, hermes_pod_state, hermes_round,
+)
+from repro.launch.elastic import (
+    drop_pod_equivalence, elastic_shrink, shrink_pod_tree,
+    survivor_allocations,
+)
+
+
+def _pods(key, n, shape=(6, 5)):
+    return {"w": jax.random.normal(key, (n,) + shape)}
+
+
+def test_live_mask_shuts_dead_pod_out_of_merge():
+    """A dead pod with a nonfinite replica and an open gate must contribute
+    nothing: the masked merge equals the survivors-only merge and stays
+    finite."""
+    pods = _pods(jax.random.PRNGKey(0), 3)
+    pods["w"] = pods["w"].at[1].set(jnp.nan)  # diverged/dead replica
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 5))}
+    gates = jnp.array([True, True, True])   # its gate even claims to push
+    losses = jnp.array([0.8, jnp.nan, 1.2])
+    live = jnp.array([True, False, True])
+    _, g_masked, _, any_push = hermes_merge(
+        pods, gates, losses, wg, jnp.float32(1.0), live=live)
+    assert bool(any_push)
+    assert bool(jnp.all(jnp.isfinite(g_masked["w"])))
+    small = {"w": pods["w"][jnp.array([0, 2])]}
+    _, g_small, _, _ = hermes_merge(
+        small, jnp.array([True, True]), jnp.array([0.8, 1.2]), wg,
+        jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(g_masked["w"]),
+                                  np.asarray(g_small["w"]))
+
+
+def test_all_dead_round_is_identity():
+    pods = _pods(jax.random.PRNGKey(2), 2)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(3), (6, 5))}
+    _, g, _, any_push = hermes_merge(
+        pods, jnp.array([True, True]), jnp.array([0.5, 0.5]), wg,
+        jnp.float32(1.0), live=jnp.zeros((2,), bool))
+    assert not bool(any_push)
+    np.testing.assert_array_equal(np.asarray(g["w"]), np.asarray(wg["w"]))
+
+
+@pytest.mark.parametrize("compression", ["none", "int8"])
+def test_masked_round_equals_reduced_round(compression):
+    """One live-masked hermes_round at n_pods, restricted to the survivors,
+    is bit-identical to the same round at n_pods-1 — the invariant the
+    elastic shrink (mask until detection, then drop the rows) relies on."""
+    cfg = HermesConfig(alpha=-0.1, window=4, lam=2, compression=compression)
+    n, drop = 3, 1
+    keep = [0, 2]
+    pods = _pods(jax.random.PRNGKey(4), n, (4, 512))
+    gst = hermes_pod_state(cfg, n)
+    # warm the gate queues so z-scores are defined and gates can open
+    wg = {"w": jnp.zeros((4, 512))}
+    err = None
+    for r in range(3):
+        losses = jnp.array([1.0, 1.0, 1.0]) + 0.01 * r
+        out = hermes_round(pods, gst, losses, wg, jnp.float32(1.0), cfg,
+                           error=err)
+        gst, err, pods, wg = (out["gup"], out["error"], out["pod_params"],
+                              out["w_global"])
+
+    dead_pods = {"w": pods["w"].at[drop].set(jnp.nan)}
+    live = jnp.array([True, False, True])
+    losses = jnp.array([0.2, jnp.nan, 0.25])  # sharp drop: gates open
+    big = hermes_round(dead_pods, gst, losses, wg, jnp.float32(1.0), cfg,
+                       live=live, error=err)
+    assert bool(big["any_push"])
+
+    small = hermes_round(
+        shrink_pod_tree(pods, keep), shrink_pod_tree(gst, keep),
+        losses[jnp.array(keep)], wg, jnp.float32(1.0), cfg,
+        error=shrink_pod_tree(err, keep))
+    np.testing.assert_array_equal(np.asarray(big["w_global"]["w"]),
+                                  np.asarray(small["w_global"]["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(shrink_pod_tree(big["pod_params"], keep)["w"]),
+        np.asarray(small["pod_params"]["w"]))
+    for k in big["gup"]:
+        np.testing.assert_array_equal(
+            np.asarray(shrink_pod_tree(big["gup"], keep)[k]),
+            np.asarray(small["gup"][k]), err_msg=f"gup[{k}]")
+    if big["error"] is not None:
+        np.testing.assert_array_equal(
+            np.asarray(shrink_pod_tree(big["error"], keep)["w"]),
+            np.asarray(small["error"]["w"]))
+
+
+def test_drop_pod_equivalence_harness():
+    """The full multi-round harness (what --drop-pod runs at the production
+    mesh) holds on however many devices the test host has."""
+    out = drop_pod_equivalence(n_pods=3, drop=2, rounds_before=3,
+                               rounds_after=2)
+    assert out["bit_identical"]
+    assert out["survivors"] == [0, 1]
+
+
+def test_shrink_pod_tree_migrates_by_index():
+    gst = hermes_pod_state(HermesConfig(window=3), 4)
+    gst = {k: v.at[2].add(7) if v.dtype != bool else v
+           for k, v in gst.items()}
+    small = shrink_pod_tree(gst, [0, 2])
+    for k in gst:
+        assert small[k].shape[0] == 2
+        np.testing.assert_array_equal(np.asarray(small[k][1]),
+                                      np.asarray(gst[k][2]), err_msg=k)
+    assert shrink_pod_tree(None, [0]) is None
+
+
+def test_elastic_shrink_respects_min_live_pods():
+    cfg = HermesConfig(min_live_pods=2)
+    state = {"pod_params": _pods(jax.random.PRNGKey(5), 3)}
+    out, mesh = elastic_shrink(state, [0, 1], None, cfg=cfg)
+    assert mesh is None
+    assert out["pod_params"]["w"].shape[0] == 2
+    with pytest.raises(ValueError, match="min_live_pods"):
+        elastic_shrink(state, [0], None, cfg=cfg)
+
+
+def test_survivor_allocations_drops_dead_and_covers_survivors():
+    cfg = HermesConfig()
+    times = {"a": 1.0, "b": 1.1, "c": 0.9, "d": 1.0, "dead": 9.0}
+    allocs = {k: Allocation(256, 16) for k in times}
+    new = survivor_allocations(times, allocs, ["dead"], cfg, n_train=4096)
+    assert set(new) == {"a", "b", "c", "d"}
+    # without the purge the dead straggler is the IQR outlier; with it the
+    # survivors are a tight cluster and nothing needs resizing
+    assert all(a.dss >= 32 for a in new.values())
+
+
+def test_membership_knobs_validate():
+    HermesConfig(failure_timeout_factor=1.5, min_live_pods=3).validate()
+    with pytest.raises(AssertionError):
+        HermesConfig(failure_timeout_factor=0.0).validate()
+    with pytest.raises(AssertionError):
+        HermesConfig(min_live_pods=0).validate()

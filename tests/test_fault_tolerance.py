@@ -3,13 +3,21 @@
 Asynchronous Hermes tolerates mid-run node deaths natively — a dead worker
 simply stops pushing; convergence continues on the survivors.  BSP needs a
 failure-detection timeout and exclusion at the barrier.
+
+The failure-path audit trail: ``RunResult.meter_events`` records every
+metered PS contact as ``(sim_t, worker, kind, nbytes)``, and no framework
+may bill anything to a worker at or after its death time — not even the
+allocator's dataset transfers (the "keeps feeding dead workers" bug).
 """
+import numpy as np
 import pytest
 
 from repro.config import HermesConfig
 from repro.core.allocator import Allocation
 from repro.core.bundles import make_paper_bundle
-from repro.core.simulator import run_framework
+from repro.core.simulator import (
+    _bsp_barrier, _Env, _run_hermes, _StopCfg, run_framework,
+)
 
 
 @pytest.fixture(scope="module")
@@ -18,35 +26,130 @@ def bundle():
     return b
 
 
+def _assert_no_posthumous_billing(result, failures):
+    billed = [(t, w, kind, nb) for t, w, kind, nb in result.meter_events
+              if w in failures and t is not None and t >= failures[w]]
+    assert not billed, f"bytes metered to dead workers: {billed[:5]}"
+
+
 def test_hermes_survives_node_deaths(bundle):
+    failures = {"B1ms_0": 0.5, "F2s_v2_0": 1.0}
     r = run_framework(
         "hermes", bundle, num_workers=6, target_acc=0.88,
         max_iterations=500, max_wall=90,
         hermes_cfg=HermesConfig(alpha=-1.3, beta=0.1, lam=5, eta=bundle.eta),
         init_alloc=Allocation(128, 16), eval_every=3,
-        failures={"B1ms_0": 0.5, "F2s_v2_0": 1.0})
+        failures=failures)
     assert r.reached_target, (r.conv_acc, r.sim_time)
     # the dead workers stopped iterating early
     assert len(r.worker_iter_times["B1ms_0"]) < \
         len(r.worker_iter_times["DS2_v2_0"])
+    _assert_no_posthumous_billing(r, failures)
 
 
 def test_bsp_excludes_failed_node_and_completes(bundle):
     ok = run_framework("bsp", bundle, num_workers=6, target_acc=0.88,
                        max_iterations=300, max_wall=60,
                        init_alloc=Allocation(128, 16), eval_every=3)
+    failures = {"F2s_v2_1": 1.0}
     failed = run_framework("bsp", bundle, num_workers=6, target_acc=0.88,
                            max_iterations=300, max_wall=60,
                            init_alloc=Allocation(128, 16), eval_every=3,
-                           failures={"F2s_v2_1": 1.0})
+                           failures=failures)
     assert failed.reached_target
     # the detection timeout costs BSP simulated time vs the clean run
     assert failed.sim_time >= ok.sim_time
+    _assert_no_posthumous_billing(failed, failures)
 
 
 def test_asp_survives_failure(bundle):
+    failures = {"B1ms_1": 0.2}
     r = run_framework("asp", bundle, num_workers=6, target_acc=0.80,
                       max_iterations=400, max_wall=60,
                       init_alloc=Allocation(128, 16), eval_every=3,
-                      failures={"B1ms_1": 0.2})
+                      failures=failures)
     assert len(r.worker_iter_times["B1ms_1"]) <= 2  # died almost immediately
+    # survivors kept iterating past the death
+    assert sum(len(v) for v in r.worker_iter_times.values()) > 10
+    _assert_no_posthumous_billing(r, failures)
+
+
+def test_bsp_barrier_charges_detection_and_compute_concurrently():
+    """The detection stall and the survivors' compute overlap: the barrier
+    is their max, never their sum (the old accounting added 3x typical on
+    top of max(durations))."""
+    durations = [1.0, 2.0, 5.0]
+    typical = 2.0
+    # no deaths: plain straggler barrier
+    assert _bsp_barrier(10.0, durations, typical, False, 3.0) == 15.0
+    # compute dominates: a 6s detection window inside a 5s... max wins
+    assert _bsp_barrier(10.0, durations, typical, True, 3.0) == 16.0
+    # compute dominates the detection timeout entirely
+    assert _bsp_barrier(10.0, [1.0, 8.0], typical, True, 3.0) == 18.0
+    # never less than the no-failure barrier
+    assert _bsp_barrier(10.0, durations, 0.1, True, 3.0) == 15.0
+
+
+def test_bsp_staggered_deaths_never_billed_posthumously(bundle):
+    """A second node dying inside the first death's detection stall must
+    also miss the (extended) barrier — nothing is billed to either."""
+    failures = {"F2s_v2_1": 1.0, "DS2_v2_0": 1.2, "B1ms_0": 1.4}
+    r = run_framework("bsp", bundle, num_workers=6, target_acc=0.88,
+                      max_iterations=60, max_wall=60,
+                      init_alloc=Allocation(128, 16), eval_every=3,
+                      failures=failures)
+    assert r.iterations > 0
+    _assert_no_posthumous_billing(r, failures)
+
+
+def test_failure_timeout_factor_knob(bundle):
+    """A longer detection timeout costs BSP more simulated time."""
+    kw = dict(num_workers=6, target_acc=0.88, max_iterations=40, max_wall=60,
+              init_alloc=Allocation(128, 16), eval_every=3,
+              failures={"F2s_v2_1": 1.0})
+    fast = run_framework("bsp", bundle, seed=0,
+                         hermes_cfg=HermesConfig(failure_timeout_factor=2.0),
+                         **kw)
+    slow = run_framework("bsp", bundle, seed=0,
+                         hermes_cfg=HermesConfig(failure_timeout_factor=30.0),
+                         **kw)
+    assert slow.sim_time > fast.sim_time
+
+
+def test_hermes_noniid_failure_redraw_and_billing(bundle):
+    """The full sweep: a non-IID hermes run with mid-run deaths and an
+    aggressive allocator must (a) finish, (b) never bill data/push bytes to
+    a dead worker, and (c) only ever hand a worker samples from its own
+    Dirichlet partition."""
+    cfg = HermesConfig(alpha=-1.3, beta=0.1, lam=5, eta=bundle.eta)
+    failures = {"B1ms_0": 2.0, "F2s_v2_0": 4.0}
+    env = _Env(bundle, num_workers=12, hermes_cfg=cfg, seed=0,
+               init_alloc=Allocation(128, 16), noniid=True,
+               compression=cfg.compression)
+    env.failures = failures
+    stop = _StopCfg(target_acc=0.995, max_iterations=250, max_sim_time=1e6,
+                    max_wall=90.0, eval_every=3, patience=40)
+    r = _run_hermes(env, stop, cfg, alloc_every=2.0)
+    assert r.iterations > 0
+    _assert_no_posthumous_billing(r, failures)
+    # reallocation happened, and every redraw stayed inside the worker's
+    # own partition (the IID-regression bug)
+    assert len(r.alloc_trace) >= 1, r.alloc_trace
+    for i, w in enumerate(env.workers):
+        assert set(np.asarray(w.loader.indices).tolist()) <= \
+            set(env.parts[i].tolist()), f"worker {w.spec.name} left its shard"
+    # dead workers left the allocator's observation set
+    for name in failures:
+        resized_after_death = [
+            (t, wname) for t, wname, _, _ in r.alloc_trace
+            if wname == name and t >= failures[name]]
+        assert not resized_after_death
+
+
+def test_redraw_indices_respects_partition(bundle):
+    env = _Env(bundle, num_workers=6, hermes_cfg=None, seed=3,
+               init_alloc=Allocation(64, 16), noniid=True)
+    for i in range(6):
+        idx = env.redraw_indices(i, 100)
+        assert set(idx.tolist()) <= set(env.parts[i].tolist())
+        assert len(idx) == min(100, len(env.parts[i]))
