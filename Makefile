@@ -23,13 +23,17 @@ quickstart:
 bench-smoke:
 	python benchmarks/comm_overhead.py --smoke
 
-# Failure-path gate (DESIGN.md §7): the in-flight pod-shrink demo (drop-pod
-# bit-identity + survivor data re-split + checkpoint restart) and the
-# elastic dryrun (masked round == reduced-size round, compress step still
-# collective-free on the survivors' mesh).  Small forced device counts so
-# it runs on every `make`-level check, not just when someone remembers the
+# Failure-path gate (DESIGN.md §7): the in-flight pod-shrink/rejoin demos
+# (drop-pod + grow-after-shrink bit-identity, data re-split, checkpoint
+# restart) and both elastic dryruns — shrink (masked round == reduced-size
+# round, compress step still collective-free on the survivors' mesh) and
+# grow (shrink->grow round trip == never-resized run, compress step still
+# collective-free on the regrown mesh).  Small forced device counts so it
+# runs on every `make`-level check, not just when someone remembers the
 # env var.
 elastic-smoke:
 	REPRO_ELASTIC_DEVICES=8 python -m repro.launch.elastic
 	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --drop-pod \
 	    --out results/dryrun_opt/hermes_elastic_smoke.json
+	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --rejoin-pod \
+	    --out results/dryrun_opt/hermes_rejoin_smoke.json

@@ -275,6 +275,11 @@ class HermesConfig:
     # below min_live_pods.
     failure_timeout_factor: float = 3.0
     min_live_pods: int = 1
+    # re-admission policy (the grow path): rejoining a recovered pod costs
+    # a recompile + re-shard stall worth this many synchronization rounds.
+    # ``core.allocator.should_readmit`` admits only when the Eq.-3 speedup
+    # from one more member over the expected remaining rounds exceeds it.
+    rejoin_cost_rounds: float = 2.0
 
     def validate(self) -> None:
         # lazy import: repro.dist imports this module at load time
@@ -287,6 +292,7 @@ class HermesConfig:
         assert self.window >= 1 and self.lam >= 1
         assert self.failure_timeout_factor > 0.0, self.failure_timeout_factor
         assert self.min_live_pods >= 1, self.min_live_pods
+        assert self.rejoin_cost_rounds >= 0.0, self.rejoin_cost_rounds
 
 
 @dataclass(frozen=True)

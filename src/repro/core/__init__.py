@@ -4,11 +4,12 @@ from repro.core.gup import GUPState, gup_init, gup_update, gup_gate_jax
 from repro.core.loss_sgd import PSState, ps_init, ps_push, loss_weighted_merge
 from repro.core.allocator import (
     detect_outliers, estimate_k, dual_binary_search, Allocation, reallocate,
+    rejoin_gain_rounds, should_readmit,
 )
 
 __all__ = [
     "GUPState", "gup_init", "gup_update", "gup_gate_jax",
     "PSState", "ps_init", "ps_push", "loss_weighted_merge",
     "detect_outliers", "estimate_k", "dual_binary_search", "Allocation",
-    "reallocate",
+    "reallocate", "rejoin_gain_rounds", "should_readmit",
 ]

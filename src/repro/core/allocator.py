@@ -38,13 +38,32 @@ def quartiles(times: Sequence[float]) -> Tuple[float, float, float]:
 
 
 def detect_outliers(times: Dict[str, float], k: float = 1.5) -> List[str]:
-    """Workers whose time falls outside [Q1 - k*IQR, Q3 + k*IQR]."""
-    if len(times) < 4:
+    """Workers whose time falls outside [Q1 - k*IQR, Q3 + k*IQR].
+
+    Below 4 observations the IQR fences degenerate (with 3 samples Q3 is
+    interpolated halfway toward the max, so no straggler is ever flagged),
+    which used to switch dynamic allocation off exactly when deaths shrink
+    the cluster into the straggler regime the paper targets.  3 members
+    fall back to a median-ratio rule: an outlier is more than ``1 + k``
+    times the median away from it (either direction).  2 members compare
+    the pair directly — the median of two is their midpoint, so no ratio
+    fence around it can ever catch the straggler — and when they diverge
+    by more than ``1 + k`` *both* are flagged, resizing both toward the
+    midpoint target (the slow one sheds work, the fast one absorbs it)."""
+    if len(times) < 2:
         return []
     vals = list(times.values())
-    q1, _, q3 = quartiles(vals)
-    iqr = q3 - q1
-    lo, hi = q1 - k * iqr, q3 + k * iqr
+    r = 1.0 + k
+    if len(times) == 2:
+        lo, hi = sorted(vals)
+        return list(times) if hi > r * max(lo, 1e-12) else []
+    if len(times) < 4:
+        _, med, _ = quartiles(vals)
+        lo, hi = med / r, med * r
+    else:
+        q1, _, q3 = quartiles(vals)
+        iqr = q3 - q1
+        lo, hi = q1 - k * iqr, q3 + k * iqr
     return [w for w, t in times.items() if t < lo or t > hi]
 
 
@@ -119,6 +138,28 @@ def dual_binary_search(k: float, t_target: float, *, epochs: int = 1,
         else:
             lo = mid + 1
     return best[2]
+
+
+def rejoin_gain_rounds(n_live: int, remaining_rounds: float) -> float:
+    """Rounds of wall-time saved by admitting one more member (Eq. 3).
+
+    The allocator re-splits the data so every member's per-round time
+    scales by ``n/(n+1)`` once the newcomer takes its share (t = K*E*DSS/
+    MBS is linear in DSS), so ``remaining_rounds`` of work finish
+    ``remaining_rounds/(n+1)`` rounds sooner."""
+    return remaining_rounds / max(1, n_live + 1)
+
+
+def should_readmit(remaining_rounds: float, n_live: int,
+                   cfg: HermesConfig) -> bool:
+    """The re-admission policy (DESIGN.md §7, the grow path).
+
+    A rejoin pays a recompile + re-shard stall worth
+    ``cfg.rejoin_cost_rounds`` rounds; admit the recovered member only
+    when the cost-model speedup over the expected remaining rounds
+    amortizes it.  Near the end of a run a rejoin is pure overhead — the
+    paper's dynamic-membership premise cuts both ways."""
+    return rejoin_gain_rounds(n_live, remaining_rounds) > cfg.rejoin_cost_rounds
 
 
 def reallocate(times: Dict[str, float], allocs: Dict[str, Allocation],

@@ -26,12 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import HermesConfig
-from repro.core.allocator import Allocation, reallocate
+from repro.core.allocator import Allocation, reallocate, should_readmit
 from repro.core.cluster import (
     CommModel, EdgeWorker, Meter, ModelBundle, WorkerSpec, default_cluster,
     _make_step, _make_eval,
 )
-from repro.core.gup import gup_update
+from repro.core.gup import gup_init, gup_update
 from repro.core.loss_sgd import ps_init, ps_push
 from repro.dist.compression import compress_tree, payload_bytes
 from repro.data.synthetic import iid_partition, dirichlet_partition
@@ -124,6 +124,11 @@ class _Env:
                                 if compression != "none"
                                 else self.params_bytes)
         self.failures: Dict[str, float] = {}
+        # {name: sim_time the node comes back} — eligibility, not admission
+        self.recoveries: Dict[str, float] = {}
+        # {name: sim_time it was actually re-admitted} — set by the run
+        # loop once the re-admission policy (should_readmit) says yes
+        self.readmitted: Dict[str, float] = {}
 
     def _sample_bytes(self) -> float:
         one = {k: v[:1] for k, v in self.bundle.train_data.items()}
@@ -131,7 +136,10 @@ class _Env:
 
     def dead(self, worker: "EdgeWorker", at_time: float) -> bool:
         t = self.failures.get(worker.spec.name)
-        return t is not None and at_time >= t
+        if t is None or at_time < t:
+            return False
+        r = self.readmitted.get(worker.spec.name)
+        return r is None or at_time < r
 
     def partition_cap(self, i: int) -> int:
         """Max samples worker ``i`` can be allocated: its Dirichlet
@@ -204,7 +212,8 @@ def run_framework(framework: str, bundle: ModelBundle, *,
                   ebsp_r: int = 150,
                   selsync_delta: float = 1.0,
                   alloc_every: float = 30.0,
-                  failures: Optional[Dict[str, float]] = None) -> RunResult:
+                  failures: Optional[Dict[str, float]] = None,
+                  recoveries: Optional[Dict[str, float]] = None) -> RunResult:
     """``failures``: {worker_name: sim_time} — the node dies (stops
     responding) at that simulated time.  Asynchronous frameworks tolerate
     this natively (dead workers simply stop contributing); BSP excludes a
@@ -213,7 +222,18 @@ def run_framework(framework: str, bundle: ModelBundle, *,
     the detection stall and the survivors' compute elapse concurrently, so
     the barrier pays their max, not their sum).  EBSP has no failure path:
     it models the paper's benchmark-then-schedule baseline only, so pass
-    ``failures`` to bsp/asp/ssp/selsync/hermes runs."""
+    ``failures`` to bsp/asp/ssp/selsync/hermes runs.
+
+    ``recoveries``: {worker_name: sim_time} — a failed node comes back at
+    that time (strictly after its death).  Only Hermes has a grow path:
+    the recovered worker is re-admitted iff the re-admission policy
+    (``should_readmit``: enough expected rounds remain to amortize
+    ``hermes_cfg.rejoin_cost_rounds``) approves, in which case it pulls
+    the current global model, restarts with fresh GUP state and a zeroed
+    compression residual, re-enters the allocator sweep seeded at the
+    median observed iteration time, and is billed the pull + dataset
+    transfer; a denied rejoin leaves it excluded (one ``rejoin_denied``
+    meter event, no bytes)."""
     hermes_cfg = hermes_cfg or HermesConfig()
     compression = hermes_cfg.compression if framework == "hermes" else "none"
     env = _Env(bundle, num_workers=num_workers,
@@ -224,6 +244,19 @@ def run_framework(framework: str, bundle: ModelBundle, *,
     stop = _StopCfg(target_acc, max_iterations, max_sim_time, max_wall,
                     eval_every, patience)
     env.failures = failures or {}
+    env.recoveries = recoveries or {}
+    for name, rt in env.recoveries.items():
+        ft = env.failures.get(name)
+        if ft is None:
+            raise ValueError(f"recovery for {name!r} without a failure")
+        if rt <= ft:
+            raise ValueError(
+                f"recovery for {name!r} at t={rt} not after its death "
+                f"at t={ft}")
+    if env.recoveries and framework != "hermes":
+        raise ValueError(
+            "only hermes has a re-admission (grow) path; pass recoveries "
+            "to hermes runs")
     if framework == "bsp":
         return _run_bsp(env, stop)
     if framework == "asp":
@@ -515,7 +548,7 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
     gup_trace: List[Tuple[float, str, float, bool]] = []
     alloc_trace: List[Tuple[float, str, int, int]] = []
     eval_n = env.eval_batch["labels"].shape[0]
-    heap: List[Tuple[float, int, int]] = []
+    heap: List[Tuple[float, int, int, int]] = []
     sim_t = 0.0
     ps_busy_until = 0.0
     last_alloc_check = 0.0
@@ -529,17 +562,81 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
     comp_key = jax.random.PRNGKey(env.seed ^ 0x51ED)
     comp_pushes = 0
 
+    # per-worker event epoch: bumped at re-admission so an in-flight
+    # pre-death completion event that lands *after* the rejoin cannot
+    # fork a second event chain (it would double-count every iteration
+    # and byte for the rest of the run)
+    epoch = [0] * len(env.workers)
+
     for i, w in enumerate(env.workers):
         d = w.sim_iteration_time(eval_n)
         itimes[w.spec.name].append(d)
-        heapq.heappush(heap, (d, i, 0))
+        heapq.heappush(heap, (d, i, 0, 0))
+        # a failed node that recovers re-enters the loop as a rejoin
+        # event (kind 2), subject to the re-admission policy below
+        if w.spec.name in env.recoveries:
+            heapq.heappush(heap, (env.recoveries[w.spec.name], i, 2, 0))
 
     def ps_eval(params) -> float:
         return env.worker_eval_loss(params)
 
     while heap:
-        sim_t, i, _ = heapq.heappop(heap)
+        sim_t, i, kind, ev_epoch = heapq.heappop(heap)
         w = env.workers[i]
+        if kind == 2:
+            # the node is back.  Re-admission policy first: the rejoin
+            # stall (model pull + dataset transfer + fresh state) only
+            # pays off when enough rounds remain to amortize it, so a
+            # recovery near the end of the run is declined outright —
+            # one telemetry-free meter event, no bytes.
+            live_n = sum(1 for x in env.workers if not env.dead(x, sim_t))
+            iters_done = sum(x.iterations for x in env.workers)
+            # remaining rounds at the CURRENT membership; should_readmit
+            # itself applies the /(n+1) post-join speedup (DESIGN.md §7)
+            remaining_rounds = max(
+                0.0, (stop.max_iterations - iters_done) / max(1, live_n))
+            if not should_readmit(remaining_rounds, live_n, hcfg):
+                # audit-trail event only: n=0 keeps it out of the paper's
+                # PS-contact count (RunResult.api_calls)
+                env.meter.call(w.spec.name, "rejoin_denied", 0.0, n=0,
+                               t=sim_t)
+                continue
+            env.readmitted[w.spec.name] = sim_t
+            epoch[i] += 1  # invalidate any in-flight pre-death event
+            w.clock = sim_t
+            # seeded exactly like a Level-B newcomer: current global
+            # model, fresh GUP state, no pending compression residual
+            env.meter.call(w.spec.name, "pull", env.params_bytes, t=sim_t)
+            w.refresh(w_global)
+            w.mom = jax.tree.map(jnp.zeros_like, w.mom)
+            w.gup = gup_init(hcfg)
+            comp_err.pop(i, None)
+            # re-enter the allocator sweep at the median observed
+            # iteration time — the newcomer has no fresh measurement yet
+            if latest_times:
+                latest_times[w.spec.name] = float(
+                    np.median(list(latest_times.values())))
+            # clamp to the redraw pool (non-IID: the worker's own
+            # partition), like the sweep path — the cost model must
+            # never bill compute for samples the worker does not hold
+            alloc = w.alloc
+            cap = env.partition_cap(i)
+            if alloc.dss > cap:
+                alloc = Allocation(cap, alloc.mbs)
+            idx = env.redraw_indices(i, alloc.dss)
+            w.set_allocation(alloc, idx)
+            xfer = len(idx) * env._sample_bytes()
+            env.meter.call(w.spec.name, "data", xfer, t=sim_t)
+            start = (sim_t + env.comm.time(env.params_bytes)
+                     + env.comm.time(xfer))
+            d = w.sim_iteration_time(eval_n)
+            itimes[w.spec.name].append(d)
+            heapq.heappush(heap, (start + d, i, 0, epoch[i]))
+            continue
+        if ev_epoch != epoch[i]:
+            # an iteration that started before the death never completed;
+            # its completion event must not revive a parallel chain
+            continue
         if env.dead(w, sim_t):
             # failed node: its pushes simply stop arriving, and its stale
             # iteration time must leave the allocator's observation set or
@@ -588,18 +685,28 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
         # allocator sweep (asynchronous monitoring).  Dead workers drop out
         # of the sweep entirely: a failed worker's stale latest_times entry
         # would keep skewing the IQR fences, and reallocating one would
-        # bill dataset bytes to a node that will never run again.
-        if sim_t - last_alloc_check >= alloc_every and len(latest_times) >= 4:
+        # bill dataset bytes to a node that will never run again.  The
+        # sweep runs down to 2 live observations (the old >= 4 floor
+        # silently switched dynamic allocation off exactly when deaths
+        # shrank the cluster into the straggler regime the paper targets);
+        # a sweep skipped for want of observations is metered, not silent.
+        if sim_t - last_alloc_check >= alloc_every:
             last_alloc_check = sim_t
             for x in env.workers:
                 if env.dead(x, sim_t):
                     latest_times.pop(x.spec.name, None)
-            live = [x for x in env.workers if not env.dead(x, sim_t)]
-            allocs = {x.spec.name: x.alloc for x in live}
-            mem = {x.spec.name: x.spec.mem_limit_dss for x in live}
-            new = reallocate(latest_times, allocs, hcfg,
-                             dss_domain=(32, max(64, n_train // max(1, len(live)))),
-                             mem_limit_dss=mem)
+            if len(latest_times) < 2:
+                # audit-trail event only (n=0): not a PS API contact
+                env.meter.call("allocator", "alloc_skip", 0.0, n=0, t=sim_t)
+                new = {}
+            else:
+                live = [x for x in env.workers if not env.dead(x, sim_t)]
+                allocs = {x.spec.name: x.alloc for x in live}
+                mem = {x.spec.name: x.spec.mem_limit_dss for x in live}
+                new = reallocate(
+                    latest_times, allocs, hcfg,
+                    dss_domain=(32, max(64, n_train // max(1, len(live)))),
+                    mem_limit_dss=mem)
             for j, x in enumerate(env.workers):
                 if x.spec.name in new and not env.dead(x, sim_t):
                     a = new[x.spec.name]
@@ -623,7 +730,7 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
             next_start = max(next_start, prefetch_ready.pop(i))
         d = w.sim_iteration_time(eval_n)
         itimes[w.spec.name].append(d)
-        heapq.heappush(heap, (next_start + d, i, 0))
+        heapq.heappush(heap, (next_start + d, i, 0, epoch[i]))
 
         iters = sum(x.iterations for x in env.workers)
         if ps.updates and ps.updates % stop.eval_every == 0:

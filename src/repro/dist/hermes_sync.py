@@ -51,6 +51,26 @@ def hermes_pod_state(cfg: HermesConfig, n_pods: int) -> Tree:
         lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), base)
 
 
+def hermes_grow_pod_state(gup_state: Tree, cfg: HermesConfig,
+                          n_new: int = 1) -> Tree:
+    """Append ``n_new`` fresh rows to a pod-stacked GUP state (the grow
+    path's mirror of ``hermes_pod_state``): empty ring buffer, zeroed
+    count/n_iter, alpha back at ``cfg.alpha``.
+
+    A fresh row's loss queue holds fewer than two valid entries for its
+    first two rounds, so its z-score is +inf and its gate *provably*
+    cannot open — a rejoined pod contributes exact zeros to the wire and
+    the merge while it warms up, which is what makes the grow path
+    invisible to the incumbent pods (``launch/elastic.py:
+    rejoin_pod_equivalence``)."""
+    fresh = gup_state_jax(cfg)
+    return jax.tree.map(
+        lambda x, f: jnp.concatenate(
+            [x, jnp.broadcast_to(f[None], (n_new,) + f.shape).astype(x.dtype)],
+            axis=0),
+        gup_state, fresh)
+
+
 def _pod_mask(gates: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
     """Reshape (n,) gates to broadcast against a (n, ...) stacked leaf."""
     return gates.reshape(gates.shape + (1,) * (leaf.ndim - 1))
@@ -217,7 +237,9 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
     states still advance independently (they are vmapped), so a survivor's
     gate trajectory is unchanged by dead peers; the host resize path
     (``launch/elastic.py``) later drops the dead rows from every
-    pod-stacked tree.
+    pod-stacked tree (shrink) or appends fresh ones seeded from
+    ``w_global`` (grow — the newcomer's empty loss queue keeps its gate
+    shut while it warms up, so incumbents never see the join).
 
     The merge is wrapped in ``jax.lax.cond`` on ``any_push``: the gate
     reduction is one scalar, and a fully closed round takes the identity

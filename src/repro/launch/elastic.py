@@ -20,7 +20,24 @@ Two resize paths live here (DESIGN.md §7):
   ``drop_pod_equivalence`` asserts exactly that, and
   ``launch/hermes_dryrun.py --drop-pod`` runs it at the production mesh.
 
-Run both demos under 8 virtual devices:
+* **In-flight pod grow** (``elastic_grow`` + ``rejoin_pod_equivalence``):
+  the inverse — a recovered pod is re-admitted by appending one row to
+  every pod-stacked tree (``grow_pod_tree``: pod_params seeded from
+  ``w_global``, fresh GUP ring buffers, zeroed error residuals),
+  regrowing the mesh onto the rejoining pod's own devices
+  (``launch.mesh.grow_mesh``), and re-splitting the data with the
+  newcomer seeded at the median observed iteration time
+  (``rejoin_allocations``).  The re-admission *policy*
+  (``core.allocator.should_readmit``, ``HermesConfig.rejoin_cost_rounds``)
+  gates the whole thing: the recompile + re-shard stall only pays off
+  when enough rounds remain to amortize it.  Because the newcomer's
+  empty loss queue keeps its gate provably shut while it warms up, the
+  join is invisible to the incumbents — ``rejoin_pod_equivalence``
+  asserts grow-after-shrink is bit-identical for them to never having
+  resized at all, and ``launch/hermes_dryrun.py --rejoin-pod`` runs that
+  proof plus a collective-free compress audit on the regrown mesh.
+
+Run the demos under 8 virtual devices:
 
     REPRO_ELASTIC_DEVICES=8 python -m repro.launch.elastic
 """
@@ -43,9 +60,17 @@ from repro.config import (
 )
 from repro.configs import get_smoke_config
 from repro.checkpoint import Checkpointer
-from repro.core.allocator import Allocation, dual_binary_search, reallocate
-from repro.dist.hermes_sync import hermes_pod_state, hermes_round
-from repro.launch.mesh import arch_rules, make_pod_mesh, shrink_mesh
+from repro.core.allocator import (
+    Allocation, dual_binary_search, reallocate, rejoin_gain_rounds,
+    should_readmit,
+)
+from repro.core.gup import gup_state_jax
+from repro.dist.hermes_sync import (
+    hermes_grow_pod_state, hermes_pod_state, hermes_round,
+)
+from repro.launch.mesh import (
+    arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
+)
 from repro.launch.steps import build_setup
 
 Tree = Any
@@ -63,15 +88,46 @@ def shrink_pod_tree(tree: Tree, keep: Sequence[int]) -> Tree:
     counters, error-feedback residuals, and the model replicas themselves
     all carry their pod identity in axis 0, so surviving state moves by
     index and nothing is re-derived.
+
+    ``keep`` is validated against the leading axis before the take:
+    ``jnp.take``'s default clamp mode would otherwise turn an out-of-range
+    or stale pod index into a silently *duplicated* survivor row — a
+    corrupted membership table must fail loudly, not fork a replica.
     """
     if tree is None:
         return None
-    idx = jnp.asarray(list(keep), jnp.int32)
+    keep = [int(k) for k in keep]
+    leaves = jax.tree.leaves(tree)
+    if leaves:
+        n_pods = leaves[0].shape[0]
+        bad = [k for k in keep if not 0 <= k < n_pods]
+        if bad:
+            raise ValueError(
+                f"pod indices {bad} out of range for leading axis "
+                f"{n_pods} (stale membership table?)")
+    if len(set(keep)) != len(keep):
+        raise ValueError(f"duplicate pod indices in keep={keep}: a "
+                         f"survivor row must not be forked")
+    idx = jnp.asarray(keep, jnp.int32)
     return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
 
 
-# state keys elastic_shrink treats as pod-stacked (leading n_pods axis)
+# state keys the resize paths treat as pod-stacked (leading n_pods axis)
 POD_STACKED_KEYS = ("pod_params", "gup", "error")
+
+
+def _reshard(tree: Tree, spec_tree: Optional[Tree],
+             mesh: Optional[Mesh]) -> Tree:
+    """device_put a pytree onto ``mesh`` using a PartitionSpec pytree
+    (``None`` replicates every leaf); no-op without a tree or a mesh."""
+    if tree is None or mesh is None:
+        return tree
+    if spec_tree is None:
+        sh = NamedSharding(mesh, PS())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+        tree, spec_tree)
 
 
 def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
@@ -96,22 +152,110 @@ def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
             f"shrinking to {len(keep)} pods violates min_live_pods="
             f"{cfg.min_live_pods}")
     new_mesh = shrink_mesh(mesh, keep) if mesh is not None else None
-
-    def _put(tree, spec_tree):
-        if tree is None or new_mesh is None:
-            return tree
-        if spec_tree is None:
-            sh = NamedSharding(new_mesh, PS())
-            return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
-        return jax.tree.map(
-            lambda x, sp: jax.device_put(x, NamedSharding(new_mesh, sp)),
-            tree, spec_tree)
-
     out: Dict[str, Any] = {}
     for k, v in state.items():
         v = shrink_pod_tree(v, keep) if k in POD_STACKED_KEYS else v
-        out[k] = _put(v, (specs or {}).get(k))
+        out[k] = _reshard(v, (specs or {}).get(k), new_mesh)
     return out, new_mesh
+
+
+def grow_pod_tree(tree: Tree, new_row: Tree, n_new: int = 1) -> Tree:
+    """Append ``n_new`` copies of an unstacked ``new_row`` pytree to every
+    leaf's leading (n_pods,) axis — the inverse of ``shrink_pod_tree``.
+
+    This is the whole join-side state migration: the newcomer's model
+    replica is ``w_global`` (it starts exactly where a refreshing pod
+    would), its GUP row is fresh (empty ring buffer — the gate cannot
+    open until the loss queue warms, see
+    ``dist.hermes_sync.hermes_grow_pod_state``), and its error-feedback
+    residual is zero (it has dropped nothing yet).
+    """
+    if tree is None:
+        return None
+    return jax.tree.map(
+        lambda x, r: jnp.concatenate(
+            [x, jnp.broadcast_to(r[None], (n_new,) + x.shape[1:])
+                .astype(x.dtype)], axis=0),
+        tree, new_row)
+
+
+def elastic_grow(state: Dict[str, Any], mesh: Optional[Mesh], *,
+                 cfg: Optional[HermesConfig] = None,
+                 specs: Optional[Dict[str, Any]] = None,
+                 remaining_rounds: Optional[float] = None
+                 ) -> Tuple[Dict[str, Any], Optional[Mesh]]:
+    """Re-admit one pod: resize the Level-B Hermes state from ``n_pods``
+    to ``n_pods + 1``, the inverse of ``elastic_shrink``.
+
+    Every pod-stacked tree gains one appended row: ``pod_params`` seeded
+    from ``state["w_global"]``, ``gup`` a fresh ring buffer
+    (``hermes_grow_pod_state``), ``error`` exact zeros.  With a ``mesh``,
+    outputs are re-sharded onto ``launch.mesh.grow_mesh``'s regrown
+    (pod, data, model) mesh — the rejoining pod's own devices fill the new
+    row, so no surviving buffer moves.  ``specs`` follows the
+    ``elastic_shrink`` convention (PartitionSpec pytrees per key; absent
+    keys replicate; ``mesh=None`` skips placement).
+
+    ``remaining_rounds`` gates the whole thing through the re-admission
+    policy (``core.allocator.should_readmit``): a rejoin pays a recompile
+    + re-shard stall worth ``cfg.rejoin_cost_rounds`` rounds, so when too
+    little work remains to amortize it the grow refuses — pass ``None``
+    to bypass the policy (caller already decided).  Returns
+    ``(new_state, regrown_mesh)``.
+    """
+    cfg = cfg or HermesConfig()
+    w_global = state["w_global"]
+    n_pods = jax.tree.leaves(state["pod_params"])[0].shape[0]
+    if remaining_rounds is not None and not should_readmit(
+            remaining_rounds, n_pods, cfg):
+        raise ValueError(
+            f"re-admission denied: expected gain "
+            f"{rejoin_gain_rounds(n_pods, remaining_rounds):.2f} rounds "
+            f"does not amortize rejoin_cost_rounds={cfg.rejoin_cost_rounds}")
+    new_mesh = grow_mesh(mesh, 1) if mesh is not None else None
+
+    # the newcomer's row per pod-stacked key; a key added to
+    # POD_STACKED_KEYS without a seeding rule here must fail loudly, not
+    # pass through with a mismatched row count
+    new_row = {
+        "pod_params": lambda: w_global,
+        "gup": None,  # handled by hermes_grow_pod_state (fresh state)
+        "error": lambda: jax.tree.map(jnp.zeros_like, w_global),
+    }
+    out: Dict[str, Any] = {}
+    for k, v in state.items():
+        if v is not None and k in POD_STACKED_KEYS:
+            v = (hermes_grow_pod_state(v, cfg) if k == "gup"
+                 else grow_pod_tree(v, new_row[k]()))
+        out[k] = _reshard(v, (specs or {}).get(k), new_mesh)
+    return out, new_mesh
+
+
+def rejoin_allocations(times: Dict[str, float],
+                       allocs: Dict[str, Allocation],
+                       newcomer: str, cfg: HermesConfig, *,
+                       n_train: int,
+                       mem_limit_dss: Optional[Dict[str, int]] = None
+                       ) -> Dict[str, Allocation]:
+    """Re-split the data shards after a membership *grow*.
+
+    The newcomer has no fresh iteration-time observation (it just came
+    back), so it enters the allocator's sweep seeded at the **median**
+    observed time — the cluster's own definition of "typical" — with a
+    median-sized starting allocation.  One ``reallocate`` round then
+    re-sizes any member the IQR sweep flags against the new, larger
+    membership.  Returns a full allocation map covering everyone.
+    """
+    assert times, "rejoin with no surviving observations"
+    med_t = float(np.median(list(times.values())))
+    med_dss = int(np.median([a.dss for a in allocs.values()]))
+    med_mbs = int(np.median([a.mbs for a in allocs.values()]))
+    times = {**times, newcomer: med_t}
+    allocs = {**allocs, newcomer: Allocation(med_dss, med_mbs)}
+    dss_hi = max(64, n_train // max(1, len(times)))
+    new = reallocate(times, allocs, cfg, dss_domain=(32, dss_hi),
+                     mem_limit_dss=dict(mem_limit_dss or {}))
+    return {**allocs, **new}
 
 
 def survivor_allocations(times: Dict[str, float],
@@ -288,6 +432,214 @@ def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
     }
 
 
+def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
+                           rounds_shrunk: int = 3, rounds_after: int = 4,
+                           mesh: Optional[Mesh] = None,
+                           cfg: Optional[HermesConfig] = None,
+                           seed: int = 0) -> Dict[str, Any]:
+    """Kill the last pod mid-run, shrink, then re-admit a pod; prove the
+    incumbents never notice either resize.
+
+    Path A (what production does): ``rounds_before`` full-membership
+    rounds, poison the last pod with NaNs, one masked round
+    (``live[-1] = False``), ``elastic_shrink`` to the survivors' mesh,
+    ``rounds_shrunk`` rounds at ``n_pods - 1``, then ``elastic_grow`` —
+    append a fresh row (pod_params = ``w_global``, empty GUP queue, zero
+    error residual) on the regrown mesh, gated by the re-admission policy
+    — and ``rounds_after`` rounds back at ``n_pods``.
+
+    Path B (the oracle — *never resized*): identical rounds on a state
+    that keeps all ``n_pods`` rows throughout: the dead stretch runs
+    live-masked, and at the rejoin boundary the dead row is re-seeded in
+    place with exactly the newcomer's state.  Every tensor — pod_params,
+    w_global, GUP ring buffers, error residuals — must match
+    **bit-identically**, which combines the PR-3 shrink invariant (masked
+    == reduced) with the grow half: a newcomer seeded at ``w_global``
+    whose empty loss queue keeps its gate shut is indistinguishable from
+    never having left.
+
+    Path C (the survivors-must-not-move check): the shrunk run simply
+    continues at ``n_pods - 1`` with no grow.  For the first
+    ``min(2, rounds_after)`` post-join rounds the newcomer's gate
+    *provably* cannot open (fewer than two losses in its queue), so the
+    incumbents' state in path A must be bit-identical to path C's — the
+    join must not move the survivors' trajectories.  This cross-pod-count
+    check runs only unsharded (``mesh=None``): two differently-shaped
+    lowered programs may reassociate the fp32 merge reduction, so under a
+    mesh the matched-shape path-B oracle carries the proof.
+
+    The dropped pod is the last row so path A's appended row occupies the
+    same index as path B's re-seeded one: fp32 merge accumulation order
+    is identical, and "bit-identical" means exactly that.
+    """
+    cfg = cfg or HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                              compression="int8", rejoin_cost_rounds=0.5)
+    assert n_pods >= 2
+    drop = n_pods - 1
+    keep = list(range(n_pods - 1))
+    if mesh is None and jax.device_count() >= n_pods:
+        mesh = make_pod_mesh(n_pods)
+    pod_spec = PS("pod")
+
+    def put(tree, m, spec):
+        if m is None:
+            return tree
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(m, spec)), tree)
+
+    def pod_specs(tree):
+        return jax.tree.map(lambda _: pod_spec, tree)
+
+    def rounds(pods, gup, err, wg, n, start, *, live=None):
+        # rows 0..k-1 always map to pods 0..k-1 (the resized pod is last),
+        # so the demo loss schedule stays aligned across every membership
+        step = jax.jit(
+            lambda p, g, e, w, losses, lv: hermes_round(
+                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e))
+        np_ = jax.tree.leaves(pods)[0].shape[0]
+        lv = (np.ones((np_,), bool) if live is None
+              else np.asarray(live, bool))
+        for r in range(start, start + n):
+            losses = _demo_losses(n_pods, r)[:np_]
+            losses = np.where(lv, losses, np.nan)  # dead pods go dark
+            out = step(pods, gup, err, wg, jnp.asarray(losses),
+                       jnp.asarray(lv))
+            pods, gup, err, wg = (out["pod_params"], out["gup"],
+                                  out["error"], out["w_global"])
+        return pods, gup, err, wg
+
+    # common prefix: full membership, then the masked death round
+    pods0, wg0, gup0 = _toy_pod_state(n_pods, cfg, seed)
+    pods = put(pods0, mesh, pod_spec)
+    gup = put(gup0, mesh, pod_spec)
+    wg = put(wg0, mesh, PS())
+    pods, gup, err, wg = rounds(pods, gup, None, wg, rounds_before, 0)
+    live = np.ones((n_pods,), bool)
+    live[drop] = False
+    pods = jax.tree.map(lambda x: x.at[drop].set(jnp.nan), pods)
+    pods, gup, err, wg = rounds(pods, gup, err, wg, 1, rounds_before,
+                                live=live)
+    snap = {k: jax.tree.map(np.asarray, v)
+            for k, v in (("pods", pods), ("gup", gup), ("err", err),
+                         ("wg", wg))}
+
+    # path A: shrink -> shrunk rounds -> grow (policy-gated) -> rounds
+    a_state, a_mesh = elastic_shrink(
+        {"pod_params": pods, "gup": gup, "error": err, "w_global": wg},
+        keep, mesh, cfg=cfg,
+        specs={"pod_params": pod_specs(pods), "gup": pod_specs(gup),
+               "error": pod_specs(err)})
+    a_pods, a_gup, a_err, a_wg = rounds(
+        a_state["pod_params"], a_state["gup"], a_state["error"],
+        a_state["w_global"], rounds_shrunk, rounds_before + 1)
+    gain = rejoin_gain_rounds(n_pods - 1, float(rounds_after))
+    g_state, g_mesh = elastic_grow(
+        {"pod_params": a_pods, "gup": a_gup, "error": a_err,
+         "w_global": a_wg},
+        a_mesh, cfg=cfg, remaining_rounds=float(rounds_after),
+        specs={"pod_params": pod_specs(a_pods), "gup": pod_specs(a_gup),
+               "error": pod_specs(a_err)})
+    warm = min(2, rounds_after)
+    start_after = rounds_before + 1 + rounds_shrunk
+    a_pods, a_gup, a_err, a_wg = rounds(
+        g_state["pod_params"], g_state["gup"], g_state["error"],
+        g_state["w_global"], warm, start_after)
+    a_warm = {"pods": jax.tree.map(np.asarray, a_pods),
+              "wg": jax.tree.map(np.asarray, a_wg)}
+    a_pods, a_gup, a_err, a_wg = rounds(
+        a_pods, a_gup, a_err, a_wg, rounds_after - warm,
+        start_after + warm)
+
+    # path B: never resize — masked rounds, then re-seed the row in place
+    # (replayed on the original full mesh so both paths run identically
+    # sharded programs: fp32 reduction grouping is part of "bit-identical")
+    b_pods = put(jax.tree.map(jnp.asarray, snap["pods"]), mesh, pod_spec)
+    b_gup = put(jax.tree.map(jnp.asarray, snap["gup"]), mesh, pod_spec)
+    b_err = put(jax.tree.map(jnp.asarray, snap["err"]), mesh, pod_spec)
+    b_wg = put(jax.tree.map(jnp.asarray, snap["wg"]), mesh, PS())
+    b_pods, b_gup, b_err, b_wg = rounds(
+        b_pods, b_gup, b_err, b_wg, rounds_shrunk, rounds_before + 1,
+        live=live)
+    fresh = gup_state_jax(cfg)
+    b_pods = jax.tree.map(
+        lambda x, g: x.at[drop].set(g.astype(x.dtype)), b_pods, b_wg)
+    b_gup = jax.tree.map(
+        lambda x, f: x.at[drop].set(f.astype(x.dtype)), b_gup, fresh)
+    b_err = jax.tree.map(lambda x: x.at[drop].set(0.0), b_err)
+    b_pods, b_gup, b_err, b_wg = rounds(
+        b_pods, b_gup, b_err, b_wg, rounds_after, start_after)
+
+    # path C: no grow — the incumbents' oracle for the warm-up rounds
+    # (only consulted unsharded; see the warmup_checked note below)
+    if mesh is None:
+        c_pods, c_gup, c_err, c_wg = rounds(
+            a_state["pod_params"], a_state["gup"], a_state["error"],
+            a_state["w_global"], rounds_shrunk + warm, rounds_before + 1)
+
+    def check(name, a, b):
+        for x, y in zip(jax.tree.leaves(jax.tree.map(np.asarray, a)),
+                        jax.tree.leaves(jax.tree.map(np.asarray, b))):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"{name}: state diverged across the "
+                              f"shrink->grow round trip")
+
+    check("pod_params", a_pods, b_pods)
+    check("gup", a_gup, b_gup)
+    check("error", a_err, b_err)
+    check("w_global", a_wg, b_wg)
+    # The join never moved the incumbents (newcomer gate shut while warm):
+    # exact only unsharded — two *different-shape* lowered programs (an
+    # n-row merge with a zero-weight row vs the (n-1)-row merge) may
+    # reassociate the fp32 reduction differently under a mesh, so on
+    # sharded runs the matched-shape oracle (path B) carries the proof.
+    warmup_checked = mesh is None
+    if warmup_checked:
+        check("warmup w_global", a_warm["wg"], c_wg)
+        check("warmup survivors",
+              {k: v[:n_pods - 1] for k, v in a_warm["pods"].items()},
+              c_pods)
+    return {
+        "n_pods": n_pods, "rejoined": drop, "incumbents": keep,
+        "mesh": list(mesh.devices.shape) if mesh is not None else None,
+        "shrunk_mesh": (list(a_mesh.devices.shape)
+                        if a_mesh is not None else None),
+        "regrown_mesh": (list(g_mesh.devices.shape)
+                         if g_mesh is not None else None),
+        "rounds": rounds_before + 1 + rounds_shrunk + rounds_after,
+        "compression": cfg.compression,
+        "readmission": {"admitted": True, "gain_rounds": gain,
+                        "rejoin_cost_rounds": cfg.rejoin_cost_rounds},
+        "bit_identical": True,
+        "warmup_checked": warmup_checked,
+    }
+
+
+def run_hermes_rejoin_demo(n_pods: int = 4, seed: int = 0) -> Dict[str, Any]:
+    """The in-flight pod-join demo: shrink->grow equivalence, policy
+    decisions, and the newcomer's data re-split."""
+    cfg = HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                       compression="int8", min_live_pods=1,
+                       rejoin_cost_rounds=0.5)
+    n_pods = max(2, min(n_pods, jax.device_count()))
+    out = rejoin_pod_equivalence(n_pods=n_pods, cfg=cfg, seed=seed)
+    # the allocator folds the newcomer in at the median observed time
+    times = {f"pod{i}": 1.0 + 0.4 * i for i in range(n_pods - 1)}
+    allocs = {f"pod{i}": Allocation(256, 16) for i in range(n_pods - 1)}
+    new = rejoin_allocations(times, allocs, f"pod{n_pods - 1}", cfg,
+                             n_train=4096)
+    assert f"pod{n_pods - 1}" in new
+    out["realloc"] = {k: {"dss": a.dss, "mbs": a.mbs}
+                      for k, a in sorted(new.items())}
+    # the policy half: plenty of work left -> admit; nearly done -> deny
+    out["policy"] = {
+        "admit_100_rounds_left": should_readmit(100.0, n_pods - 1, cfg),
+        "deny_0p5_rounds_left": not should_readmit(0.5, n_pods - 1, cfg),
+    }
+    assert out["policy"]["admit_100_rounds_left"]
+    assert out["policy"]["deny_0p5_rounds_left"]
+    return out
+
+
 def run_hermes_shrink_demo(n_pods: int = 4, drop: int = 1,
                            seed: int = 0) -> Dict[str, Any]:
     """The in-flight pod-shrink demo: drop-pod equivalence + data re-split."""
@@ -379,4 +731,5 @@ def run_demo(arch: str = "qwen3-8b", steps_before: int = 5,
 
 if __name__ == "__main__":
     print(json.dumps({"hermes_shrink": run_hermes_shrink_demo(),
+                      "hermes_rejoin": run_hermes_rejoin_demo(),
                       "checkpoint_restart": run_demo()}, indent=2))

@@ -40,7 +40,7 @@ from repro.configs import get_config
 from repro.dist.compression import encode_tree
 from repro.dist.hermes_sync import hermes_pod_state, hermes_round
 from repro.launch.mesh import (
-    arch_parallel_config, arch_rules, make_pod_mesh, shrink_mesh,
+    arch_parallel_config, arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
 )
 from repro.launch.steps import abstract_init_lm, _shard_tree
 from repro.roofline.hlo_parse import parse_hlo_cost
@@ -91,6 +91,12 @@ def main() -> None:
                          "assert survivor bit-identity and a collective-"
                          "free compress step at the reduced mesh")
     ap.add_argument("--drop-pod-index", type=int, default=1)
+    ap.add_argument("--rejoin-pod", action="store_true",
+                    help="the grow-path audit: shrink then re-admit a "
+                         "pod, assert the incumbents' rounds are bit-"
+                         "identical to never having resized, and that "
+                         "the compress step on the regrown mesh stays "
+                         "collective-free")
     args = ap.parse_args()
 
     # (2, 16, 16) at the default 512 forced devices; REPRO_DRYRUN_DEVICES
@@ -175,6 +181,42 @@ def main() -> None:
             "survivor_mesh": list(small.devices.shape),
             "survivor_compress_collectives": small_cost.collective_counts,
             "survivor_compress_all_gathers": small_ag,
+            "equivalence": eq,
+        }
+
+    if args.rejoin_pod:
+        from repro.launch.elastic import rejoin_pod_equivalence
+
+        # the grow path resizes the LAST pod row (append == in-place)
+        drop = n_pods - 1
+        small = shrink_mesh(mesh, list(range(n_pods - 1)))
+        regrown = grow_mesh(small, 1)
+        # grow_mesh must hand the rejoining pod its own devices back
+        assert regrown.devices.shape == mesh.devices.shape, (
+            regrown.devices.shape, mesh.devices.shape)
+        assert ({d.id for d in regrown.devices.flat}
+                == {d.id for d in mesh.devices.flat}), \
+            "regrown mesh must reuse the dropped pod's devices"
+
+        # 1. the lowered compress step stays collective-free on the
+        #    regrown (n_pods, data, model) mesh — a rejoin cannot regress
+        #    the shard-local wire layout
+        regrown_base = jax.tree.map(
+            lambda sh: NamedSharding(regrown, sh.spec), base_shardings)
+        re_cost, re_ag, _, _, _ = _compress_audit(
+            regrown, hcfg, abstract_params, regrown_base)
+
+        # 2. numeric bit-identity of the shrink->grow round trip, executed
+        #    on a small stand-in pod mesh (the math is mesh-size
+        #    independent; the full-size schedule is what part (1) audits)
+        eq = rejoin_pod_equivalence(
+            n_pods=2,
+            mesh=make_pod_mesh(2, max_devices=min(jax.device_count(), 8)))
+        rec["rejoin_pod"] = {
+            "rejoined": drop,
+            "regrown_mesh": list(regrown.devices.shape),
+            "regrown_compress_collectives": re_cost.collective_counts,
+            "regrown_compress_all_gathers": re_ag,
             "equivalence": eq,
         }
 

@@ -72,6 +72,36 @@ def shrink_mesh(mesh: Mesh, keep_pods: Sequence[int]) -> Mesh:
     return Mesh(mesh.devices[np.asarray(keep)], mesh.axis_names)
 
 
+def grow_mesh(mesh: Mesh, n_new: int = 1, *,
+              new_devices: Optional[Sequence] = None) -> Mesh:
+    """The regrown mesh: same per-pod (data, model) grid, more pods.
+
+    Inverse of ``shrink_mesh``: ``n_new`` pod rows are appended to the
+    leading "pod" axis.  By default the rows are filled with the first
+    free devices — present in ``jax.devices()`` but absent from ``mesh``
+    — which after a shrink are exactly the dropped pod's devices, so a
+    rejoining pod gets its own hardware back and no surviving pod's
+    buffers have to move.  Pass ``new_devices`` to pin the rows
+    explicitly (a genuinely new pod's devices)."""
+    assert mesh.axis_names[0] == "pod", mesh.axis_names
+    assert n_new >= 1, n_new
+    per_pod_shape = mesh.devices.shape[1:]
+    need = n_new * int(np.prod(per_pod_shape))
+    if new_devices is None:
+        in_use = {d.id for d in mesh.devices.flat}
+        pool = [d for d in jax.devices() if d.id not in in_use]
+    else:
+        pool = list(new_devices)
+    if len(pool) < need:
+        raise ValueError(
+            f"growing by {n_new} pod(s) needs {need} free devices, "
+            f"have {len(pool)}")
+    rows = np.asarray(pool[:need], dtype=object).reshape(
+        (n_new,) + per_pod_shape)
+    return Mesh(np.concatenate([mesh.devices, rows], axis=0),
+                mesh.axis_names)
+
+
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 

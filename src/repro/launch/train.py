@@ -45,6 +45,12 @@ Tree = Any
 
 PRESETS: Dict[str, ModelConfig] = {}
 
+# The single choke point for device->host reads in the Hermes round loop.
+# Everything the loop *must* know on the host goes through here, and only
+# at log intervals or after the loop — never per round, so the dispatch
+# queue stays full (tests/test_perf_opts.py counts these calls).
+_host_fetch = jax.device_get
+
 
 def _preset(name: str) -> ModelConfig:
     if name == "lm100m":
@@ -166,9 +172,19 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     def eval_global(params):
         return lm_loss(params, eval_batch, cfg)
 
-    merges, rounds = 0, 0
+    @jax.jit
+    def eval_if_push(any_push, params, L_prev):
+        # re-evaluate the global loss only on merge rounds, entirely on
+        # device: the old `bool(any_push)` here forced a host sync every
+        # round, stalling dispatch on the hot path
+        return jax.lax.cond(any_push,
+                            lambda: lm_loss(params, eval_batch, cfg),
+                            lambda: L_prev)
+
+    rounds = 0
+    merges_dev = jnp.int32(0)      # device-side counter; fetched at logs
     t0 = time.time()
-    history = []
+    history_dev = []               # (step, device mean loss, device gates)
     for i in range(steps):
         stacked = {k: jnp.stack([next(b)[k] for b in batch_iters])
                    for k in ("tokens", "targets")}
@@ -182,17 +198,30 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                                    jax.random.PRNGKey(seed), i))
             pod_params, w_global = out["pod_params"], out["w_global"]
             gup, error = out["gup"], out["error"]
-            if bool(out["any_push"]):
-                merges += 1
-                L_global = eval_global(w_global)
-            history.append((i + 1, float(jnp.mean(pod_losses)),
-                            int(jnp.sum(out["gates"]))))
+            L_global = eval_if_push(out["any_push"], w_global, L_global)
+            merges_dev = merges_dev + out["any_push"].astype(jnp.int32)
+            history_dev.append((i + 1, jnp.mean(pod_losses),
+                                jnp.sum(out["gates"])))
         if (i + 1) % log_every == 0:
-            print(f"step {i+1:5d} pod-loss {float(jnp.mean(losses)):.4f} "
-                  f"global-L {float(L_global):.4f} merges={merges}/{rounds}",
+            pod_l, gl_l, m = _host_fetch((jnp.mean(losses), L_global,
+                                          merges_dev))
+            print(f"step {i+1:5d} pod-loss {float(pod_l):.4f} "
+                  f"global-L {float(gl_l):.4f} merges={int(m)}/{rounds}",
                   flush=True)
-    gl = float(eval_global(w_global))
-    pl = [float(x) for x in pod_eval(pod_params)]
+    # one bulk transfer: stack the per-round scalars on device first so
+    # the final fetch is two arrays, not thousands of tiny copies
+    hist_steps = [s for s, _, _ in history_dev]
+    hist_loss = (jnp.stack([l for _, l, _ in history_dev])
+                 if history_dev else jnp.zeros((0,)))
+    hist_gates = (jnp.stack([g for _, _, g in history_dev])
+                  if history_dev else jnp.zeros((0,), jnp.int32))
+    gl, pl, merges, hist_loss, hist_gates = _host_fetch(
+        (eval_global(w_global), pod_eval(pod_params), merges_dev,
+         hist_loss, hist_gates))
+    gl, merges = float(gl), int(merges)
+    pl = [float(x) for x in pl]
+    history = [(s, float(l), int(g))
+               for s, l, g in zip(hist_steps, hist_loss, hist_gates)]
     return {"global_loss": gl, "merges": merges, "rounds": rounds,
             "pod_losses": pl, "best_pod_loss": min(pl),
             "history": history, "steps": steps,

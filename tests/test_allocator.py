@@ -23,6 +23,33 @@ def test_no_outliers_in_uniform_cluster():
     assert detect_outliers(times) == []
 
 
+def test_two_worker_cluster_flags_divergent_pair():
+    """The median of two is their midpoint, so no ratio fence around it
+    can catch the straggler — a divergent pair flags BOTH members (each
+    is resized toward the midpoint target)."""
+    assert set(detect_outliers({"fast": 1.0, "slow": 4.0})) == \
+        {"fast", "slow"}
+    assert detect_outliers({"a": 1.0, "b": 1.2}) == []
+    assert detect_outliers({"only": 1.0}) == []
+
+
+def test_two_worker_reallocate_shrinks_the_straggler():
+    cfg = HermesConfig()
+    times = {"fast": 1.0, "slow": 6.0}
+    allocs = {w: Allocation(256, 16) for w in times}
+    new = reallocate(times, allocs, cfg, dss_domain=(16, 60000))
+    assert set(new) == {"fast", "slow"}
+    # both move toward the 3.5s midpoint: the straggler sheds steps,
+    # the fast node absorbs them
+    assert new["slow"].steps_per_iteration < Allocation(256, 16).steps_per_iteration
+    assert new["fast"].steps_per_iteration > Allocation(256, 16).steps_per_iteration
+
+
+def test_three_worker_median_ratio_rule():
+    assert detect_outliers({"a": 1.0, "b": 1.05, "slow": 30.0}) == ["slow"]
+    assert detect_outliers({"a": 1.0, "b": 1.05, "c": 1.1}) == []
+
+
 def test_estimate_k_inverts_eq3():
     k = 0.035
     t = predicted_time(k, 1, 640, 16)

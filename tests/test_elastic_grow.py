@@ -1,0 +1,238 @@
+"""Pod re-admission (DESIGN.md §7, the grow path): state seeding, the
+re-admission policy, and the shrink->grow round-trip bit-identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.allocator import (
+    Allocation, rejoin_gain_rounds, should_readmit,
+)
+from repro.dist.hermes_sync import (
+    hermes_grow_pod_state, hermes_merge, hermes_pod_state, hermes_round,
+)
+from repro.launch.elastic import (
+    elastic_grow, elastic_shrink, grow_pod_tree, rejoin_allocations,
+    rejoin_pod_equivalence, shrink_pod_tree,
+)
+
+
+def _pods(key, n, shape=(6, 5)):
+    return {"w": jax.random.normal(key, (n,) + shape)}
+
+
+# ---------------------------------------------------------------------------
+# state seeding
+# ---------------------------------------------------------------------------
+
+def test_grow_pod_tree_appends_seeded_row():
+    pods = _pods(jax.random.PRNGKey(0), 3)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 5))}
+    grown = grow_pod_tree(pods, wg)
+    assert grown["w"].shape == (4, 6, 5)
+    np.testing.assert_array_equal(np.asarray(grown["w"][:3]),
+                                  np.asarray(pods["w"]))
+    np.testing.assert_array_equal(np.asarray(grown["w"][3]),
+                                  np.asarray(wg["w"]))
+    assert grow_pod_tree(None, wg) is None
+
+
+def test_hermes_grow_pod_state_is_fresh():
+    cfg = HermesConfig(alpha=-0.7, window=5)
+    gst = hermes_pod_state(cfg, 2)
+    # advance the incumbents so the fresh row is distinguishable
+    gst = {k: (v.at[:].add(3) if v.dtype != bool else v)
+           for k, v in gst.items()}
+    grown = hermes_grow_pod_state(gst, cfg)
+    for k in gst:
+        assert grown[k].shape[0] == 3
+        np.testing.assert_array_equal(np.asarray(grown[k][:2]),
+                                      np.asarray(gst[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(grown["queue"][2]),
+                                  np.zeros(5, np.float32))
+    assert int(grown["count"][2]) == 0 and int(grown["n_iter"][2]) == 0
+    assert float(grown["alpha"][2]) == np.float32(cfg.alpha)
+
+
+def test_newcomer_gate_provably_shut_while_warming():
+    """A fresh GUP row has fewer than two queue entries for its first two
+    rounds, so its z-score is +inf and the gate cannot open — the property
+    the whole grow path leans on."""
+    cfg = HermesConfig(alpha=-0.01, window=4, lam=2)  # maximally permissive
+    gst = hermes_grow_pod_state(hermes_pod_state(cfg, 1), cfg)
+    pods = _pods(jax.random.PRNGKey(2), 2, (3, 4))
+    wg = {"w": jnp.zeros((3, 4))}
+    for r in range(2):
+        losses = jnp.array([1.0, 0.01])  # a huge drop: gate wants to open
+        out = hermes_round(pods, gst, losses, wg, jnp.float32(1.0), cfg)
+        assert not bool(out["gates"][1]), f"fresh gate opened on round {r}"
+        gst, pods, wg = out["gup"], out["pod_params"], out["w_global"]
+
+
+def test_elastic_grow_seeds_newcomer_from_global():
+    cfg = HermesConfig(window=3)
+    pods = _pods(jax.random.PRNGKey(3), 2)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(4), (6, 5))}
+    err = _pods(jax.random.PRNGKey(5), 2)
+    state = {"pod_params": pods, "gup": hermes_pod_state(cfg, 2),
+             "error": err, "w_global": wg}
+    out, mesh = elastic_grow(state, None, cfg=cfg)
+    assert mesh is None
+    assert out["pod_params"]["w"].shape == (3, 6, 5)
+    np.testing.assert_array_equal(np.asarray(out["pod_params"]["w"][2]),
+                                  np.asarray(wg["w"]))
+    np.testing.assert_array_equal(np.asarray(out["error"]["w"][2]),
+                                  np.zeros((6, 5), np.float32))
+    np.testing.assert_array_equal(np.asarray(out["error"]["w"][:2]),
+                                  np.asarray(err["w"]))
+    assert out["gup"]["queue"].shape == (3, 3)
+    assert int(out["gup"]["count"][2]) == 0
+    np.testing.assert_array_equal(np.asarray(out["w_global"]["w"]),
+                                  np.asarray(wg["w"]))
+
+
+# ---------------------------------------------------------------------------
+# re-admission policy
+# ---------------------------------------------------------------------------
+
+def test_should_readmit_amortization():
+    cfg = HermesConfig(rejoin_cost_rounds=2.0)
+    # 3 live members, 100 rounds left: gain 25 rounds >> 2 -> admit
+    assert should_readmit(100.0, 3, cfg)
+    # 3 live members, 4 rounds left: gain 1 round < 2 -> deny
+    assert not should_readmit(4.0, 3, cfg)
+    assert rejoin_gain_rounds(3, 100.0) == pytest.approx(25.0)
+    # a zero-cost policy admits any strictly positive gain
+    assert should_readmit(0.1, 7, HermesConfig(rejoin_cost_rounds=0.0))
+
+
+def test_elastic_grow_policy_gates_the_resize():
+    cfg = HermesConfig(rejoin_cost_rounds=5.0)
+    state = {"pod_params": _pods(jax.random.PRNGKey(6), 2),
+             "gup": hermes_pod_state(cfg, 2),
+             "error": None,
+             "w_global": {"w": jnp.zeros((6, 5))}}
+    with pytest.raises(ValueError, match="re-admission denied"):
+        elastic_grow(state, None, cfg=cfg, remaining_rounds=3.0)
+    out, _ = elastic_grow(state, None, cfg=cfg, remaining_rounds=100.0)
+    assert out["pod_params"]["w"].shape[0] == 3
+    # remaining_rounds=None bypasses the policy (caller decided)
+    out, _ = elastic_grow(state, None, cfg=cfg)
+    assert out["pod_params"]["w"].shape[0] == 3
+
+
+def test_rejoin_allocations_seeds_newcomer_at_median():
+    cfg = HermesConfig()
+    times = {"a": 1.0, "b": 1.1, "c": 0.9}
+    allocs = {k: Allocation(256, 16) for k in times}
+    new = rejoin_allocations(times, allocs, "back", cfg, n_train=4096)
+    assert set(new) == {"a", "b", "c", "back"}
+    # median-of-cluster seed: the newcomer is not an outlier, so it keeps
+    # the median-sized allocation
+    assert new["back"] == Allocation(256, 16)
+
+
+# ---------------------------------------------------------------------------
+# the round-trip invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pods", [2, 3])
+def test_shrink_grow_round_trip_bit_identical(n_pods):
+    """Drop the last pod, run shrunk, re-admit, run regrown: every tensor
+    matches the never-resized oracle bit-for-bit, and (unsharded) the
+    incumbents' warm-up rounds match the no-grow continuation."""
+    out = rejoin_pod_equivalence(n_pods=n_pods, rounds_before=3,
+                                 rounds_shrunk=2, rounds_after=3)
+    assert out["bit_identical"]
+    assert out["rejoined"] == n_pods - 1
+    if out["mesh"] is None:
+        assert out["warmup_checked"]
+    assert out["readmission"]["admitted"]
+
+
+def test_rejoined_pod_first_open_gate_merges():
+    """Once the rejoined pod's queue has warmed and its loss drops, its
+    gate opens and the merge folds it in — matching the hermes_merge
+    oracle and moving w_global toward the newcomer."""
+    cfg = HermesConfig(alpha=-0.5, window=4, lam=2, compression="none")
+    pods = _pods(jax.random.PRNGKey(7), 2, (4, 8))
+    state = {"pod_params": pods, "gup": hermes_pod_state(cfg, 2),
+             "error": None,
+             "w_global": {"w": jnp.zeros((4, 8))}}
+    out, _ = elastic_grow(state, None, cfg=cfg)
+    pods, gst, err = out["pod_params"], out["gup"], out["error"]
+    wg = out["w_global"]
+    # warm every queue with flat losses (no gate opens), then a sharp
+    # drop on the newcomer only — all through the elastic-path form with
+    # an explicit (all-live) membership mask
+    live = jnp.ones((3,), bool)
+    for r in range(3):
+        losses = jnp.array([1.0, 1.0, 1.0]) + 0.01 * r
+        o = hermes_round(pods, gst, losses, wg, jnp.float32(1.0), cfg,
+                         live=live, error=err)
+        assert not bool(o["any_push"])
+        pods, gst, err, wg = (o["pod_params"], o["gup"], o["error"],
+                              o["w_global"])
+    # local training moved the newcomer's replica; now its loss drops
+    pods = {"w": pods["w"].at[2].add(
+        jax.random.normal(jax.random.PRNGKey(13), (4, 8)))}
+    losses = jnp.array([1.05, 1.05, 0.2])
+    o = hermes_round(pods, gst, losses, wg, jnp.float32(1.0), cfg,
+                     live=live, error=err)
+    gates = np.asarray(o["gates"])
+    assert bool(o["any_push"]) and gates[2] and not gates[:2].any()
+    # oracle: the same single-pusher merge through hermes_merge
+    _, wg_oracle, _, _ = hermes_merge(
+        pods, jnp.asarray(gates), losses, wg, jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(o["w_global"]["w"]),
+                                  np.asarray(wg_oracle["w"]))
+    # and the newcomer refreshed from the merged global model
+    np.testing.assert_array_equal(np.asarray(o["pod_params"]["w"][2]),
+                                  np.asarray(o["w_global"]["w"]))
+    assert not np.array_equal(np.asarray(o["w_global"]["w"]),
+                              np.asarray(wg["w"]))
+
+
+def test_grow_then_shrink_is_identity_for_incumbents():
+    """shrink(grow(state)) restores the incumbents' state exactly."""
+    cfg = HermesConfig(window=4)
+    pods = _pods(jax.random.PRNGKey(8), 3)
+    err = _pods(jax.random.PRNGKey(9), 3)
+    state = {"pod_params": pods, "gup": hermes_pod_state(cfg, 3),
+             "error": err,
+             "w_global": {"w": jax.random.normal(jax.random.PRNGKey(10),
+                                                 (6, 5))}}
+    grown, _ = elastic_grow(state, None, cfg=cfg)
+    back, _ = elastic_shrink(grown, [0, 1, 2], None, cfg=cfg)
+    for k in ("pod_params", "error"):
+        np.testing.assert_array_equal(np.asarray(back[k]["w"]),
+                                      np.asarray(state[k]["w"]), err_msg=k)
+    for k in state["gup"]:
+        np.testing.assert_array_equal(np.asarray(back["gup"][k]),
+                                      np.asarray(state["gup"][k]),
+                                      err_msg=f"gup[{k}]")
+
+
+# ---------------------------------------------------------------------------
+# shrink-side index validation (the jnp.take clamp-mode regression)
+# ---------------------------------------------------------------------------
+
+def test_shrink_pod_tree_rejects_out_of_range_index():
+    """jnp.take's default clamp mode silently duplicated a survivor row
+    for a stale index; it must raise instead."""
+    pods = _pods(jax.random.PRNGKey(11), 3)
+    with pytest.raises(ValueError, match="out of range"):
+        shrink_pod_tree(pods, [0, 3])
+    with pytest.raises(ValueError, match="out of range"):
+        shrink_pod_tree(pods, [-1, 1])
+
+
+def test_shrink_pod_tree_rejects_duplicates():
+    pods = _pods(jax.random.PRNGKey(12), 3)
+    with pytest.raises(ValueError, match="duplicate"):
+        shrink_pod_tree(pods, [0, 0])
+    # valid takes still work, in keep order
+    small = shrink_pod_tree(pods, [2, 0])
+    np.testing.assert_array_equal(np.asarray(small["w"][0]),
+                                  np.asarray(pods["w"][2]))

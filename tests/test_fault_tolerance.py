@@ -153,3 +153,152 @@ def test_redraw_indices_respects_partition(bundle):
         idx = env.redraw_indices(i, 100)
         assert set(idx.tolist()) <= set(env.parts[i].tolist())
         assert len(idx) == min(100, len(env.parts[i]))
+
+
+# ---------------------------------------------------------------------------
+# the grow path: recovered workers re-enter the run (re-admission policy)
+# ---------------------------------------------------------------------------
+
+def test_hermes_readmits_recovered_worker(bundle):
+    """A failed worker that comes back is re-admitted (policy approves),
+    pulls the global model + a fresh shard (billed at rejoin time), and
+    iterates again; the dead window stays billing-free."""
+    failures = {"B1ms_0": 0.5}
+    recoveries = {"B1ms_0": 1.0}
+    r = run_framework(
+        "hermes", bundle, num_workers=6, target_acc=0.97,
+        max_iterations=400, max_wall=120,
+        hermes_cfg=HermesConfig(alpha=-1.3, beta=0.1, lam=5, eta=bundle.eta),
+        init_alloc=Allocation(128, 16), eval_every=3,
+        failures=failures, recoveries=recoveries)
+    ev = [e for e in r.meter_events
+          if e[1] == "B1ms_0" and e[0] is not None]
+    dead_window = [e for e in ev if 0.5 <= e[0] < 1.0]
+    post = [e for e in ev if e[0] >= 1.0]
+    assert not dead_window, f"billed while dead: {dead_window[:5]}"
+    # the rejoin stall is billed: one model pull + one dataset transfer
+    assert any(k == "pull" for _, _, k, _ in post)
+    assert any(k == "data" for _, _, k, _ in post)
+    # and the worker actually runs again (telemetry per iteration)
+    assert any(k == "telemetry" for _, _, k, _ in post)
+
+
+def test_hermes_rejoin_denied_when_not_amortized(bundle):
+    """With rejoin_cost_rounds too high for the remaining work, the
+    policy declines: one rejoin_denied event, not a single byte billed to
+    the dead worker afterwards."""
+    failures = {"B1ms_0": 0.5}
+    recoveries = {"B1ms_0": 1.0}
+    r = run_framework(
+        "hermes", bundle, num_workers=6, target_acc=0.999,
+        max_iterations=60, max_wall=60,
+        hermes_cfg=HermesConfig(alpha=-1.3, lam=5, eta=bundle.eta,
+                                rejoin_cost_rounds=1000.0),
+        init_alloc=Allocation(128, 16), eval_every=3,
+        failures=failures, recoveries=recoveries)
+    denied = [e for e in r.meter_events if e[2] == "rejoin_denied"]
+    assert len(denied) == 1
+    billed = [e for e in r.meter_events
+              if e[1] == "B1ms_0" and e[0] is not None and e[0] >= 0.5
+              and e[2] != "rejoin_denied" and e[3] > 0]
+    assert not billed, f"denied rejoin still billed: {billed[:5]}"
+
+
+def test_stale_pre_death_event_cannot_fork_the_rejoined_worker(bundle):
+    """A worker that dies mid-iteration and is re-admitted before that
+    iteration's completion event fires must end up with ONE event chain:
+    the stale completion lands after readmission (so the dead() check no
+    longer swallows it) and used to double every iteration and byte."""
+    cfg = HermesConfig(alpha=-1.3, lam=5, eta=bundle.eta)
+    # die at 0.3 (mid-first-iteration, B1ms takes ~0.5s), back at 0.4 —
+    # before the in-flight completion event at ~0.5
+    failures = {"B1ms_0": 0.3}
+    recoveries = {"B1ms_0": 0.4}
+    r = run_framework(
+        "hermes", bundle, num_workers=6, target_acc=0.97,
+        max_iterations=300, max_wall=90,
+        hermes_cfg=cfg, init_alloc=Allocation(128, 16), eval_every=3,
+        failures=failures, recoveries=recoveries)
+    t_tel = sorted(t for t, w, k, _ in r.meter_events
+                   if w == "B1ms_0" and k == "telemetry" and t is not None
+                   and t >= 0.4)
+    assert len(t_tel) >= 3, "rejoined worker barely ran"
+    # one chain: consecutive iterations are spaced by a full iteration
+    # time (~0.5s for B1ms); a forked double chain interleaves at half
+    gaps = np.diff(t_tel)
+    assert gaps.min() > 0.25, f"forked event chain: gaps {gaps[:6]}"
+
+
+def test_rejoined_worker_clamps_to_its_partition(bundle):
+    """Non-IID rejoin: the restored allocation must clamp to the
+    worker's own Dirichlet partition, like the sweep path — the cost
+    model may not bill compute for samples the worker does not hold."""
+    cfg = HermesConfig(alpha=-1.3, lam=5, eta=bundle.eta,
+                       rejoin_cost_rounds=0.1)  # short run: always admit
+    env = _Env(bundle, num_workers=4, hermes_cfg=cfg, seed=0,
+               init_alloc=Allocation(2048, 256), noniid=True,
+               compression=cfg.compression)
+    i = min(range(4), key=lambda j: len(env.parts[j]))
+    name = env.workers[i].spec.name
+    assert len(env.parts[i]) < 2048, "fixture partition unexpectedly big"
+    env.failures = {name: 0.5}
+    env.recoveries = {name: 1.0}
+    stop = _StopCfg(target_acc=0.999, max_iterations=40, max_sim_time=1e6,
+                    max_wall=60.0, eval_every=3, patience=40)
+    _run_hermes(env, stop, cfg, alloc_every=1e9)  # no sweep: rejoin only
+    w = env.workers[i]
+    assert name in env.readmitted
+    assert w.alloc.dss <= env.partition_cap(i)
+    assert len(w.loader.indices) == w.alloc.dss
+
+
+def test_recoveries_validated():
+    b, _ = make_paper_bundle("mnist", n=400, eval_batch=64)
+    with pytest.raises(ValueError, match="without a failure"):
+        run_framework("hermes", b, num_workers=4, max_iterations=4,
+                      recoveries={"B1ms_0": 1.0})
+    with pytest.raises(ValueError, match="not after its death"):
+        run_framework("hermes", b, num_workers=4, max_iterations=4,
+                      failures={"B1ms_0": 2.0}, recoveries={"B1ms_0": 1.0})
+    with pytest.raises(ValueError, match="grow"):
+        run_framework("bsp", b, num_workers=4, max_iterations=4,
+                      failures={"B1ms_0": 1.0}, recoveries={"B1ms_0": 2.0})
+
+
+# ---------------------------------------------------------------------------
+# the allocation sweep below 4 workers (the silent-stop regression)
+# ---------------------------------------------------------------------------
+
+def test_three_worker_cluster_still_reallocates(bundle):
+    """Deaths shrinking the cluster below 4 used to switch dynamic
+    allocation off silently — the exact straggler regime the paper
+    targets.  A 3-worker cluster with one straggler must still resize."""
+    cfg = HermesConfig(alpha=-1.3, lam=5, eta=bundle.eta)
+    env = _Env(bundle, num_workers=3, hermes_cfg=cfg, seed=0,
+               init_alloc=Allocation(128, 16), noniid=False,
+               compression=cfg.compression)
+    env.workers[0].spec.k_base = 0.2  # a genuine straggler (>2.5x median)
+    stop = _StopCfg(target_acc=0.999, max_iterations=150, max_sim_time=1e6,
+                    max_wall=90.0, eval_every=3, patience=40)
+    r = _run_hermes(env, stop, cfg, alloc_every=1.0)
+    resized = {w for _, w, _, _ in r.alloc_trace}
+    assert env.workers[0].spec.name in resized, r.alloc_trace
+    # and the straggler was pulled toward the median: strictly less work
+    last = [a for a in r.alloc_trace if a[1] == env.workers[0].spec.name][-1]
+    assert last[2] // last[3] < 128 // 16
+
+
+def test_starved_sweep_is_metered_not_silent(bundle):
+    """With every observation gone (sole survivor), the sweep is skipped
+    but leaves an alloc_skip meter event as the audit trail."""
+    failures = {"B1ms_0": 0.4, "F2s_v2_0": 0.4}
+    r = run_framework(
+        "hermes", bundle, num_workers=3, target_acc=0.999,
+        max_iterations=120, max_wall=60,
+        hermes_cfg=HermesConfig(alpha=-1.3, lam=5, eta=bundle.eta),
+        init_alloc=Allocation(128, 16), eval_every=3, alloc_every=1.0,
+        failures=failures)
+    skips = [e for e in r.meter_events if e[2] == "alloc_skip"]
+    assert skips, "skipped sweep left no audit trail"
+    # and nothing was ever reallocated once the cluster starved
+    assert not any(t >= 0.4 for t, _, _, _ in r.alloc_trace)
