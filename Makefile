@@ -1,10 +1,11 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test collect quickstart bench-smoke elastic-smoke
+.PHONY: test collect kernel-smoke quickstart bench-smoke elastic-smoke
 
-# tier-1 verify (ROADMAP.md)
-test:
+# tier-1 verify (ROADMAP.md); the collect gate and the sub-byte wire
+# kernel smoke run first so layout/billing drift fails before the suite
+test: collect kernel-smoke
 	python -m pytest -x -q
 
 # Import-graph smoke gate: every test module must collect with zero import
@@ -12,6 +13,16 @@ test:
 # `repro.dist` package — cheap enough to run on every commit.
 collect:
 	python -m pytest --collect-only -q
+
+# Sub-byte wire gate (ISSUE 5): pack/unpack + packed fused-merge kernels in
+# interpret mode (REPRO_WIRE_KERNEL=1 forces the Pallas path on CPU), then
+# the dryrun byte audit — the lowered cross-pod collective must ship
+# exactly the billed bytes for every registered format, with int4 at
+# <= 0.5625 B/element.
+kernel-smoke:
+	REPRO_WIRE_KERNEL=1 python benchmarks/kernel_bench.py --smoke
+	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --byte-audit \
+	    --out results/dryrun_opt/hermes_byte_audit_smoke.json
 
 quickstart:
 	python examples/quickstart.py

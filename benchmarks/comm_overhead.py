@@ -85,16 +85,28 @@ def smoke() -> Dict:
 
     1. int4 < int8 < fp16 < none wire bytes on a real parameter tree —
        straight from the registry's ``payload_bytes``, the same per-leaf
-       function the simulator bills pushes with.
-    2. A tiny int4 Hermes run end-to-end (stochastic rounding + error
+       function the simulator bills pushes with (and, since ISSUE 5, the
+       *measured* nbytes of the physical payload).
+    2. int4 bills ~0.5 B/element + one fp32 scale per 256-block on a
+       block-aligned LM-sized leaf — exactly nibbles + scales, proving the
+       sub-byte format is physically sub-byte, not just billed that way.
+    3. A tiny int4 Hermes run end-to-end (stochastic rounding + error
        feedback through the simulator's compressed push path).
     """
+    import jax.numpy as jnp
+
     bundle, _ = make_paper_bundle("mnist", n=512, eval_batch=64)
     params = bundle.init(jax.random.PRNGKey(0))
     bytes_by_mode = {m: payload_bytes(params, m)
                      for m in ("none", "fp16", "int8", "int4")}
     assert (bytes_by_mode["int4"] < bytes_by_mode["int8"]
             < bytes_by_mode["fp16"] < bytes_by_mode["none"]), bytes_by_mode
+    n = 4096 * 2048
+    lm_leaf = {"w": jnp.zeros((4096, 2048), jnp.float32)}
+    int4_bytes = payload_bytes(lm_leaf, "int4")
+    assert int4_bytes == n // 2 + 4 * (n // 256), int4_bytes  # nibbles+scales
+    assert int4_bytes <= 0.5625 * n, int4_bytes
+    assert 2 * int4_bytes <= payload_bytes(lm_leaf, "int8") + 4 * (n // 256)
     r = run_framework(
         "hermes", bundle, num_workers=4, target_acc=0.99,
         max_iterations=60, max_wall=30, eval_every=2, seed=0,
@@ -104,6 +116,7 @@ def smoke() -> Dict:
     assert r.iterations > 0 and r.bytes_transferred > 0
     return {
         "payload_bytes": bytes_by_mode,
+        "int4_lm_leaf_bytes_per_elt": round(int4_bytes / n, 6),
         "int4_run": {"iterations": r.iterations,
                      "pushes": r.calls_by_kind.get("push", 0),
                      "mbytes": round(r.bytes_transferred / 1e6, 3)},

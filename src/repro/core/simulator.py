@@ -118,8 +118,10 @@ class _Env:
         self.test_full = {k: jnp.asarray(v) for k, v in te.items()}
         self.params_bytes = bundle.nbytes(self.params0)
         # per-leaf registry billing for one compressed push of the model
-        # delta — block padding and per-leaf scale counts included, so
-        # Level A bills exactly what the wire registry says
+        # delta; payload_bytes is *measured* from the encoded payload
+        # arrays (trimmed wire q/q_packed + per-leaf scales), so Level A
+        # bills exactly the bytes the physical collective would ship —
+        # the hermes_dryrun --byte-audit proves the two can't drift
         self.push_wire_bytes = (payload_bytes(self.params0, compression)
                                 if compression != "none"
                                 else self.params_bytes)

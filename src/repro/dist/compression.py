@@ -16,10 +16,11 @@ hook); this module provides the pytree-level operations on top of it:
   (Karimireddy et al., 2019).
 * :func:`payload_bytes` — the single per-leaf billing function the
   simulator and benchmarks use.
-* :func:`resolve_kernel_dispatch` — kernel-vs-jnp dispatch policy,
-  overridable via ``HermesConfig.kernel_dispatch`` or the
-  ``REPRO_WIRE_KERNEL`` env var so CPU CI can exercise the Pallas kernel
-  path in interpret mode.
+* :func:`resolve_kernel_dispatch` — kernel-vs-jnp dispatch policy
+  (re-exported from :mod:`repro.dist.wire`, where the formats themselves
+  consult it for the int4 nibble pack), overridable via
+  ``HermesConfig.kernel_dispatch`` or the ``REPRO_WIRE_KERNEL`` env var so
+  CPU CI can exercise the Pallas kernel path in interpret mode.
 
 Blocked formats are shard-local (blocks tile the last axis only; leading
 axes — including the pod axis of a stacked delta — are untouched), so the
@@ -29,7 +30,6 @@ whole-array layout of ``kernels/quantize.py`` for callers that want it.
 """
 from __future__ import annotations
 
-import os
 from typing import Any, Optional, Tuple
 
 import jax
@@ -37,36 +37,10 @@ import jax.numpy as jnp
 
 from repro.dist.wire import (  # noqa: F401  (re-exported API)
     BLOCK, WireFormat, available_formats, get_format, register,
+    resolve_kernel_dispatch,
 )
 
 Tree = Any
-
-
-# ---------------------------------------------------------------------------
-# Kernel dispatch policy
-# ---------------------------------------------------------------------------
-
-def resolve_kernel_dispatch(policy: str = "auto") -> bool:
-    """Should quantize/merge route through the Pallas kernels?
-
-    Priority: ``REPRO_WIRE_KERNEL`` env var (``1/on`` forces the kernel
-    path — interpret mode off-TPU — ``0/off`` forces jnp) > the config
-    policy (``"on"`` / ``"off"``) > backend probe (``"auto"``: kernels on
-    TPU, jnp twins elsewhere).
-    """
-    if policy not in ("auto", "on", "off"):
-        raise ValueError(
-            f"kernel_dispatch policy {policy!r} (want auto|on|off)")
-    env = os.environ.get("REPRO_WIRE_KERNEL", "").strip().lower()
-    if env in ("1", "on", "true", "yes"):
-        return True
-    if env in ("0", "off", "false", "no"):
-        return False
-    if policy == "on":
-        return True
-    if policy == "off":
-        return False
-    return jax.default_backend() == "tpu"
 
 
 def _use_kernel() -> bool:
@@ -166,10 +140,13 @@ def compress_tree(tree: Tree, mode: str = "int8",
 def payload_bytes(tree: Tree, mode: str = "int8") -> int:
     """Wire bytes for one push of ``tree`` under ``mode``.
 
-    Blocked formats bill the unpadded elements (sub-byte formats at
-    bits/8 per element) plus one fp32 scale per block; fp16/none bill 2/4
-    bytes per element.  Leaf dtypes are ignored — the wire format, not the
-    in-memory dtype, is billed.
+    *Measured*, per leaf, from the format's own encoded payload
+    (``WireFormat.payload_bytes``: abstract-eval of ``encode``, summed
+    ``nbytes``): int8 is 1 B/element + one fp32 scale per 256-block, int4
+    the nibble-packed ~0.5 B/element + scales, fp16/none 2/4 B/element.
+    Leaf dtypes are ignored — the wire format, not the in-memory dtype,
+    is billed; ``hermes_dryrun --byte-audit`` proves the lowered
+    collective ships exactly these bytes.
     """
     fmt = get_format(mode)
     return sum(fmt.payload_bytes(leaf.shape)

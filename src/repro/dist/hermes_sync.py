@@ -21,10 +21,13 @@ model, exactly as a paper worker does after a push+pull.
 
 Compression goes through the :mod:`repro.dist.wire` registry.  The merge
 consumes the encoded *payloads* — on the fused-kernel path a format's
-``fused_merge`` hook (the Pallas dequant-merge kernel for int8/int4) merges
-``(q, scales)`` straight into the global leaf without ever materializing a
-dequantized fp32 delta tree; the jnp path decodes per leaf and is the
-oracle the kernel is pinned against.
+``fused_merge`` hook merges them straight into the global leaf without
+ever materializing a dequantized fp32 delta tree: int8 rides the Pallas
+dequant-merge kernel over ``(q, scales)``, int4 the packed variant over
+``(q_packed, scales)`` whose nibble unpack is fused into the tile loop, so
+the half-width wire payload is also the only thing the merge ever reads
+from HBM.  The jnp path decodes per leaf and is the oracle the kernels are
+pinned against.
 """
 from __future__ import annotations
 

@@ -5,11 +5,19 @@ Replaces the old ``"none"|"fp16"|"int8"`` string-switch (DESIGN.md
 
 * ``encode(leaf) -> payload``    dict of arrays that cross the pod axis,
 * ``decode(payload, shape, dtype)``  the receiver-side reconstruction,
-* ``payload_bytes(shape)``       wire bytes billed for one leaf (the single
-  source of truth `CommModel` and the benchmarks use),
+* ``payload_bytes(shape)``       wire bytes billed for one leaf — **measured**
+  by abstractly evaluating ``encode`` and summing the payload arrays'
+  ``nbytes``, so the bill and the physical collective can never drift
+  apart (the ``hermes_dryrun --byte-audit`` lowers the cross-pod
+  all-gather and asserts its operand bytes equal this number),
 * ``fused_merge`` (optional)     a hook that merges the *compressed* payload
   straight into the global model through the Pallas dequant-merge kernel,
   so the merge never round-trips a dequantized fp32 delta tree.
+
+Sub-byte formats are physically sub-byte: ``int4`` ships ``q_packed`` —
+two nibbles per int8 byte, paired within each 256-element block
+(``kernels/pack.py``) — so the lowered collective moves half the bytes of
+the int8 path, not just half the billed bytes.
 
 Blocked formats are **shard-local**: the absmax blocks tile exactly one
 axis (``block_axis`` — the rightmost whole-block axis) and every other axis
@@ -32,7 +40,8 @@ pipeline (Level-A billing, Level-B merge, benchmarks) picks it up.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+import os
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +49,35 @@ import jax.numpy as jnp
 Payload = Dict[str, jnp.ndarray]
 
 BLOCK = 256  # absmax block along the last axis; kernels/quantize.py agrees
+
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch policy
+# ---------------------------------------------------------------------------
+
+def resolve_kernel_dispatch(policy: str = "auto") -> bool:
+    """Should quantize/pack/merge route through the Pallas kernels?
+
+    Priority: ``REPRO_WIRE_KERNEL`` env var (``1/on`` forces the kernel
+    path — interpret mode off-TPU — ``0/off`` forces jnp) > the config
+    policy (``"on"`` / ``"off"``) > backend probe (``"auto"``: kernels on
+    TPU, jnp twins elsewhere).  Lives here (not ``dist.compression``) so
+    the wire formats themselves can consult it — the int4 nibble pack has
+    a Pallas kernel and a jnp fallback; ``dist.compression`` re-exports.
+    """
+    if policy not in ("auto", "on", "off"):
+        raise ValueError(
+            f"kernel_dispatch policy {policy!r} (want auto|on|off)")
+    env = os.environ.get("REPRO_WIRE_KERNEL", "").strip().lower()
+    if env in ("1", "on", "true", "yes"):
+        return True
+    if env in ("0", "off", "false", "no"):
+        return False
+    if policy == "on":
+        return True
+    if policy == "off":
+        return False
+    return jax.default_backend() == "tpu"
 
 
 def _norm_shape(shape) -> Tuple[int, ...]:
@@ -52,7 +90,20 @@ def _numel(shape) -> int:
     return int(math.prod(_norm_shape(shape)))
 
 
-def block_axis(shape) -> int:
+def _shard_factor(rule, mesh) -> int:
+    """Devices the rule splits one axis over (1 when unsharded/mesh-free)."""
+    if rule is None or mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    members = (rule,) if isinstance(rule, str) else tuple(rule)
+    f = 1
+    for m in members:
+        f *= sizes.get(m, 1)
+    return f
+
+
+def block_axis(shape, *, axes: Optional[Sequence[Optional[str]]] = None,
+               rules=None) -> int:
     """Which axis the absmax blocks tile for a leaf of ``shape``.
 
     The rightmost axis whose size is a whole number of blocks, else the
@@ -63,8 +114,30 @@ def block_axis(shape) -> int:
     embed and the compress step stays collective-free (the
     ``hermes_dryrun`` assertion).  Deterministic in the shape alone, so
     encode and decode never need side-channel metadata.
+
+    ``axes``/``rules`` are an optional **advisory** sharding hint (ROADMAP
+    "Block-axis/shard-rule coupling"): ``axes`` names the leaf's logical
+    axes (the ``param_axes`` twin) and ``rules`` is a mesh-bound
+    ``dist.sharding.AxisRules``.  With the hint, the rightmost
+    block-divisible axis whose *per-shard slice* is still block-divisible
+    (unsharded axes trivially qualify) is preferred over a
+    sharded-but-misaligned one; when no divisible axis aligns, the choice
+    falls back to the shape-only rule.  Encode/decode always use the
+    shape-only path — the hint exists for placement planning and for the
+    dryrun audit that asserts no assigned architecture's layout actually
+    diverges from it (if one ever does, the shard-local guarantee is lost
+    and the collective-free assertion fails loudly).
     """
     s = _norm_shape(shape)
+    if axes is not None and rules is not None:
+        axs = list(axes) + [None] * (len(s) - len(axes))
+        for ax in range(len(s) - 1, -1, -1):
+            if s[ax] % BLOCK != 0:
+                continue
+            f = _shard_factor(rules.rules.get(axs[ax]) if axs[ax] else None,
+                              rules.mesh)
+            if s[ax] % f == 0 and (s[ax] // f) % BLOCK == 0:
+                return ax
     for ax in range(len(s) - 1, -1, -1):
         if s[ax] % BLOCK == 0:
             return ax
@@ -85,7 +158,30 @@ class WireFormat:
         raise NotImplementedError
 
     def payload_bytes(self, shape) -> int:
-        raise NotImplementedError
+        """Wire bytes for one leaf of ``shape``: the **measured** size of
+        what ``encode`` emits (``sum(arr.nbytes)`` over the payload via
+        ``jax.eval_shape`` — block padding included), not a parallel
+        billing formula.  Level-A billing, the benchmarks, and the dryrun
+        byte audit all read this, so whatever the lowered collective
+        physically ships is by construction what gets billed.  Formats
+        whose true wire cost differs from their jax payload (e.g. an
+        entropy-coded format) may still override.
+        """
+        s = _norm_shape(shape)
+        # per-instance memo: encode is pure in the shape, so one abstract
+        # evaluation per (format, leaf shape) is enough forever
+        cache = self.__dict__.setdefault("_measured_bytes", {})
+        got = cache.get(s)
+        if got is None:
+            p = jax.eval_shape(
+                lambda x: self.encode(
+                    x, rng=jax.random.PRNGKey(0) if self.stochastic
+                    else None),
+                jax.ShapeDtypeStruct(s, jnp.float32))
+            got = int(sum(math.prod(a.shape) * a.dtype.itemsize
+                          for a in jax.tree.leaves(p)))
+            cache[s] = got
+        return got
 
     # Optional fused-merge hook: merge the payload of a pod-stacked delta
     # leaf directly into the global leaf ``g`` without materializing the
@@ -110,9 +206,6 @@ class NoneFormat(WireFormat):
     def decode(self, payload, shape, dtype):
         return payload["x"].reshape(shape).astype(dtype)
 
-    def payload_bytes(self, shape):
-        return 4 * _numel(shape)
-
 
 class Fp16Format(WireFormat):
     """Half-precision cast (the paper's §IV-D format): 2 bytes/element."""
@@ -125,8 +218,14 @@ class Fp16Format(WireFormat):
     def decode(self, payload, shape, dtype):
         return payload["h"].reshape(shape).astype(dtype)
 
-    def payload_bytes(self, shape):
-        return 2 * _numel(shape)
+
+def _pad_axis(x: jnp.ndarray, ax: int, to: int) -> jnp.ndarray:
+    """Zero-pad axis ``ax`` of ``x`` up to length ``to`` (no-op if equal)."""
+    if x.shape[ax] == to:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[ax] = (0, to - x.shape[ax])
+    return jnp.pad(x, widths)
 
 
 class BlockedIntFormat(WireFormat):
@@ -135,14 +234,18 @@ class BlockedIntFormat(WireFormat):
     Wire layout per leaf: with ``ax = block_axis(shape)``, ``d = shape[ax]``
     and ``nb = ceil(d/BLOCK)``:
 
-        q:      shape with axis ax -> nb*BLOCK   int8 (zero-padded blocks)
-        scales: shape with axis ax -> nb         fp32 (per-block absmax/qmax)
+        q:      shape with axis ax -> d    int8 (one per *real* element)
+        scales: shape with axis ax -> nb   fp32 (per-block absmax/qmax)
 
     Every other axis is preserved verbatim (shard-local — no leaf flatten).
-    ``q`` holds the quantized values in [-qmax, qmax]; sub-byte formats
-    still store one int8 per element in memory but bill ``bits/8`` bytes
-    per element on the wire (packing is a wire-protocol concern, not a
-    compute-layout one).
+    ``q`` holds the quantized values in [-qmax, qmax]; the zero padding the
+    block reduce needs internally is **trimmed off the wire** (it carries
+    no information — the receiver re-pads locally), so the measured
+    payload is exactly one byte per element plus the scales, whatever the
+    leaf shape.  Sub-byte subclasses repack ``q`` into a genuinely
+    narrower wire payload (``Int4Format`` ships two nibbles per byte) so
+    the physical collective — and therefore the measured bill — is
+    sub-byte too.
     """
 
     bits: int = 8
@@ -151,27 +254,29 @@ class BlockedIntFormat(WireFormat):
     def _round(self, y: jnp.ndarray, rng) -> jnp.ndarray:
         return jnp.round(y)
 
-    def encode(self, x, *, rng=None):
+    def _quantize(self, x, rng):
+        """Whole-block quantization: (q_padded, scales, s, ax, d, nb)."""
         s = _norm_shape(x.shape)
         ax = block_axis(s)
         d = s[ax]
         nb = -(-d // BLOCK)
-        xb = x.reshape(s).astype(jnp.float32)
-        pad = nb * BLOCK - d
-        if pad:
-            widths = [(0, 0)] * len(s)
-            widths[ax] = (0, pad)
-            xb = jnp.pad(xb, widths)
+        xb = _pad_axis(x.reshape(s).astype(jnp.float32), ax, nb * BLOCK)
         xb = xb.reshape(s[:ax] + (nb, BLOCK) + s[ax + 1:])
         scale = jnp.max(jnp.abs(xb), axis=ax + 1, keepdims=True) \
             / float(self.qmax)
         scale = jnp.maximum(scale, 1e-12)
         q = jnp.clip(self._round(xb / scale, rng),
                      -float(self.qmax), float(self.qmax))
-        return {"q": q.astype(jnp.int8).reshape(
+        return (q.astype(jnp.int8).reshape(
                     s[:ax] + (nb * BLOCK,) + s[ax + 1:]),
-                "scales": scale.astype(jnp.float32).reshape(
-                    s[:ax] + (nb,) + s[ax + 1:])}
+                scale.astype(jnp.float32).reshape(
+                    s[:ax] + (nb,) + s[ax + 1:]),
+                s, ax, d, nb)
+
+    def encode(self, x, *, rng=None):
+        q, scale, s, ax, d, nb = self._quantize(x, rng)
+        idx = (slice(None),) * ax + (slice(0, d),)
+        return {"q": q[idx], "scales": scale}
 
     def decode(self, payload, shape, dtype):
         q, sc = payload["q"], payload["scales"]
@@ -179,18 +284,12 @@ class BlockedIntFormat(WireFormat):
         ax = block_axis(s)
         d = s[ax]
         nb = sc.shape[ax]
+        q = _pad_axis(q, ax, nb * BLOCK)  # re-grow the trimmed wire array
         xb = q.reshape(s[:ax] + (nb, BLOCK) + s[ax + 1:]).astype(jnp.float32) \
             * jnp.expand_dims(sc, ax + 1)
         flat = xb.reshape(s[:ax] + (nb * BLOCK,) + s[ax + 1:])
         idx = (slice(None),) * ax + (slice(0, d),)
         return flat[idx].reshape(shape).astype(dtype)
-
-    def payload_bytes(self, shape):
-        s = _norm_shape(shape)
-        n = _numel(s)
-        d = s[block_axis(s)]
-        n_blocks = (n // d) * -(-d // BLOCK)
-        return -(-n * self.bits // 8) + 4 * n_blocks
 
     def fused_merge(self, g, payload, w2, denom, any_push):
         # ax mirrors what encode() chose for the stacked delta leaf, whose
@@ -210,7 +309,7 @@ class Int8Format(BlockedIntFormat):
 
 
 class Int4Format(BlockedIntFormat):
-    """Blockwise int4 with **stochastic rounding**: 0.5 bytes/element.
+    """Blockwise int4, **stochastic rounding**, **nibble-packed** payload.
 
     ``q = floor(x/scale + u)``, ``u ~ U[0, 1)`` — unbiased in expectation
     (E[q·scale] = x inside the representable range), so quantization noise
@@ -219,16 +318,95 @@ class Int4Format(BlockedIntFormat):
     fresh ``rng`` per round; with ``rng=None`` the rounding falls back to a
     fixed key (deterministic, still bounded-error, no longer unbiased
     across rounds).
+
+    The wire payload is ``q_packed``: two nibbles per int8 byte, paired
+    *within one quantization block* so the pack is exactly as shard-local
+    as the blocks themselves.  Whole 256-blocks use the
+    ``kernels/pack.py`` kernel layout (packed byte ``k`` of a block =
+    element ``k`` low nibble, element ``k + 128`` high); a leaf's final
+    partial block of ``rem`` elements pairs ``(k, k + ceil(rem/2))``
+    instead (``kernels/ref.py:pack_tail_ref``), so even a short blocked
+    axis ships ~0.5 B/element — the blocked axis carries
+    ``(d//256)*128 + ceil((d%256)/2)`` wire bytes, which is what
+    ``payload_bytes`` now measures.  Pack/unpack dispatch follows the
+    same policy as the merge kernels (``resolve_kernel_dispatch``:
+    ``REPRO_WIRE_KERNEL`` > config > backend probe) with exact jnp twins
+    on the fallback path; the fused merge consumes ``q_packed`` directly
+    (``ops.dequant_merge_packed``), so the unpacked int8 tree never lands
+    in HBM either.
     """
 
     name = "int4"
     bits, qmax = 4, 7
     stochastic = True
 
+    HALF = BLOCK // 2  # packed bytes per whole block
+
     def _round(self, y, rng):
         if rng is None:
             rng = jax.random.PRNGKey(0)
         return jnp.floor(y + jax.random.uniform(rng, y.shape))
+
+    @classmethod
+    def packed_len(cls, d: int) -> int:
+        """Packed wire bytes along a blocked axis of ``d`` elements."""
+        return (d // BLOCK) * cls.HALF + (d % BLOCK + 1) // 2
+
+    def encode(self, x, *, rng=None):
+        from repro.kernels import ref
+        q, scale, s, ax, d, nb = self._quantize(x, rng)
+        nf = d // BLOCK                      # whole blocks
+        rem = d % BLOCK
+        parts = []
+        if nf:
+            head = jax.lax.slice_in_dim(q, 0, nf * BLOCK, axis=ax)
+            if resolve_kernel_dispatch():
+                from repro.kernels import ops
+                parts.append(ops.pack_int4(head, axis=ax))
+            else:
+                parts.append(ref.pack_nibbles_ref(head, axis=ax, block=BLOCK))
+        if rem:
+            tail = jax.lax.slice_in_dim(q, nf * BLOCK, d, axis=ax)
+            parts.append(ref.pack_tail_ref(tail, axis=ax))
+        packed = parts[0] if len(parts) == 1 else jnp.concatenate(parts, ax)
+        return {"q_packed": packed, "scales": scale}
+
+    def unpack_payload(self, payload: Payload, shape) -> jnp.ndarray:
+        """Wire ``q_packed`` -> the trimmed int8 ``q`` (one per element)."""
+        from repro.kernels import ref
+        s = _norm_shape(shape)
+        ax = block_axis(s)
+        d = s[ax]
+        nf = d // BLOCK
+        rem = d % BLOCK
+        packed = payload["q_packed"]
+        parts = []
+        if nf:
+            head = jax.lax.slice_in_dim(packed, 0, nf * self.HALF, axis=ax)
+            if resolve_kernel_dispatch():
+                from repro.kernels import ops
+                parts.append(ops.unpack_int4(head, axis=ax))
+            else:
+                parts.append(ref.unpack_nibbles_ref(head, axis=ax,
+                                                    block=BLOCK))
+        if rem:
+            tail = jax.lax.slice_in_dim(packed, nf * self.HALF,
+                                        packed.shape[ax], axis=ax)
+            parts.append(ref.unpack_tail_ref(tail, rem, axis=ax))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, ax)
+
+    def decode(self, payload, shape, dtype):
+        q = self.unpack_payload(payload, shape)
+        return super().decode({"q": q, "scales": payload["scales"]},
+                              shape, dtype)
+
+    def fused_merge(self, g, payload, w2, denom, any_push):
+        from repro.kernels import ops
+        n_pods = payload["q_packed"].shape[0]
+        ax = block_axis((n_pods,) + tuple(g.shape))
+        return ops.dequant_merge_packed(g, payload["q_packed"],
+                                        payload["scales"], w2, denom,
+                                        any_push, axis=ax)
 
 
 # ---------------------------------------------------------------------------

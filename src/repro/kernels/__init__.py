@@ -5,5 +5,7 @@
 #   quantize             — int8 blockwise gradient-push compression
 #   loss_weighted_update — fused Algorithm-2 merge
 #   dequant_merge        — fused dequant + Algorithm-2 merge over (q, scales)
-#                          int8/int4 wire payloads (no fp32 delta round-trip)
+#                          int8 wire payloads (no fp32 delta round-trip), plus
+#                          the packed variant consuming nibble-packed int4
+#   pack                 — int4 nibble pack/unpack (two nibbles per byte)
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.

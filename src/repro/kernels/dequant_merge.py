@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 BLOCK = 256  # quantization block (matches dist/wire.py)
 SUB = 32     # int8 sublane tile
 LANE = 128
+HALF = 128   # packed bytes per 256-block (kernels/pack.py layout)
 
 
 def _kernel(g_ref, q_ref, s_ref, w_ref, o_ref, *, n_pods: int):
@@ -71,7 +72,11 @@ def dequant_merge(g: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
         scales = jnp.moveaxis(scales, ax, -1)
         g = jnp.moveaxis(g, ax - 1, -1)
     d = g.shape[-1]
-    d_pad = q.shape[-1]
+    # the wire ships q trimmed to the real elements; re-grow the block
+    # padding locally (zeros dequantize to zero, so the merge is unchanged)
+    d_pad = scales.shape[-1] * block
+    if q.shape[-1] != d_pad:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, d_pad - q.shape[-1])])
     if d_pad != d:
         g = jnp.pad(g, [(0, 0)] * (g.ndim - 1) + [(0, d_pad - d)])
     lead = math.prod(g.shape[:-1])
@@ -110,5 +115,99 @@ def dequant_merge(g: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
     )(g2, q2, s2, scal)
     out = out.reshape(-1)[:n].reshape(g.shape[:-1] + (d_pad,))[..., :d]
     if ax != q.ndim - 1:
+        out = jnp.moveaxis(out, -1, ax - 1)
+    return out.reshape(shape)
+
+
+def _packed_kernel(g_ref, p_ref, s_ref, w_ref, o_ref, *, n_pods: int):
+    g = g_ref[...].astype(jnp.float32)            # (SUB, 2, LANE)
+    w = w_ref[...]                                # (1, 2 + n_pods)
+    denom = w[0, 0]
+    any_push = w[0, 1] > 0.5
+    acc0 = denom * g[:, 0, :]                     # low-nibble half-block
+    acc1 = denom * g[:, 1, :]                     # high-nibble half-block
+    for i in range(n_pods):
+        p = p_ref[i].astype(jnp.int32)            # (SUB, LANE) packed bytes
+        lo = ((p & 0xF) ^ 8) - 8                  # sign-extend low nibble
+        hi = p >> 4                               # arithmetic shift: high
+        s = s_ref[i]                              # (SUB, 1) per-block scale
+        acc0 = acc0 + w[0, 2 + i] * (lo.astype(jnp.float32) * s)
+        acc1 = acc1 + w[0, 2 + i] * (hi.astype(jnp.float32) * s)
+    merged = jnp.stack([acc0 / denom, acc1 / denom], axis=1)
+    o_ref[...] = jnp.where(any_push, merged, g).astype(o_ref.dtype)
+
+
+def dequant_merge_packed(g: jnp.ndarray, q_packed: jnp.ndarray,
+                         scales: jnp.ndarray, w2, denom, any_push, *,
+                         block: int = BLOCK, axis: int = -1,
+                         interpret: bool = False) -> jnp.ndarray:
+    """The :func:`dequant_merge` variant over nibble-packed int4 payloads.
+
+    ``q_packed`` halves the blocked ``axis`` (two nibbles per byte, paired
+    within each 256-block as in ``kernels/pack.py``); the unpack is fused
+    into the merge tile loop as a prologue, so neither the unpacked int8
+    tree nor a dequantized fp32 tree ever lands in HBM.  Each packed
+    (SUB, LANE) tile expands in VMEM to one (SUB, 2, LANE) fp32 block tile
+    of ``g`` — the low nibbles are the block's first 128 lanes, the high
+    nibbles its last 128 — with one scale per block row, and the arithmetic
+    matches :func:`dequant_merge` on the unpacked payload bit-for-bit.
+    """
+    if block != BLOCK:
+        raise ValueError(f"packed merge is fixed to {BLOCK}-blocks, "
+                         f"got {block}")
+    n_pods = q_packed.shape[0]
+    shape = g.shape
+    if g.ndim == 0:
+        g = g.reshape(1)
+    ax = axis % q_packed.ndim
+    if ax == 0:
+        raise ValueError("blocked axis must not be the pod axis")
+    if ax != q_packed.ndim - 1:
+        q_packed = jnp.moveaxis(q_packed, ax, -1)
+        scales = jnp.moveaxis(scales, ax, -1)
+        g = jnp.moveaxis(g, ax - 1, -1)
+    d = g.shape[-1]
+    d_pad = scales.shape[-1] * block               # nb * block elements
+    # re-pair the trimmed wire tail into whole packed blocks (zero nibbles
+    # dequantize to zero, so the merge is unchanged — exact layout ops)
+    from repro.kernels import ref as _ref
+    q_packed = _ref.canonicalize_packed_ref(q_packed, d, axis=-1,
+                                            block=block)
+    if d_pad != d:
+        g = jnp.pad(g, [(0, 0)] * (g.ndim - 1) + [(0, d_pad - d)])
+    lead = math.prod(g.shape[:-1])
+    rows = lead * d_pad // block                   # one row per 256-block
+    g3 = g.reshape(rows, 2, LANE)
+    p2 = q_packed.reshape(n_pods, rows, HALF)
+    s2 = scales.reshape(n_pods, rows)[..., None]   # (n_pods, rows, 1)
+    pad_r = (-rows) % SUB
+    if pad_r:
+        g3 = jnp.pad(g3, ((0, pad_r), (0, 0), (0, 0)))
+        p2 = jnp.pad(p2, ((0, 0), (0, pad_r), (0, 0)))
+        s2 = jnp.pad(s2, ((0, 0), (0, pad_r), (0, 0)), constant_values=1.0)
+        rows += pad_r
+    scal = jnp.concatenate([
+        jnp.asarray(denom, jnp.float32).reshape(1),
+        jnp.asarray(any_push, jnp.float32).reshape(1),
+        jnp.asarray(w2, jnp.float32).reshape(-1),
+    ]).reshape(1, -1)
+
+    kern = functools.partial(_packed_kernel, n_pods=n_pods)
+    out = pl.pallas_call(
+        kern,
+        grid=(rows // SUB,),
+        in_specs=[
+            pl.BlockSpec((SUB, 2, LANE), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n_pods, SUB, HALF), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_pods, SUB, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, 2 + n_pods), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((SUB, 2, LANE), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 2, LANE), g.dtype),
+        interpret=interpret,
+    )(g3, p2, s2, scal)
+    out = out.reshape(-1)[:lead * d_pad].reshape(g.shape[:-1] + (d_pad,))
+    out = out[..., :d]
+    if ax != q_packed.ndim - 1:
         out = jnp.moveaxis(out, -1, ax - 1)
     return out.reshape(shape)

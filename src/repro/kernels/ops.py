@@ -19,6 +19,7 @@ from repro.kernels import rglru_scan as _lru
 from repro.kernels import quantize as _qz
 from repro.kernels import loss_weighted_update as _lwu
 from repro.kernels import dequant_merge as _dqm
+from repro.kernels import pack as _pk
 
 
 def _interpret() -> bool:
@@ -77,3 +78,24 @@ def dequant_merge(g, q, scales, w2, denom, any_push, *, block=256, axis=-1):
     """Merge blocked int payloads (q, scales) straight into the global leaf."""
     return _dqm.dequant_merge(g, q, scales, w2, denom, any_push,
                               block=block, axis=axis, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block", "axis"))
+def dequant_merge_packed(g, q_packed, scales, w2, denom, any_push, *,
+                         block=256, axis=-1):
+    """Merge nibble-packed int4 payloads; unpack fused into the tile loop."""
+    return _dqm.dequant_merge_packed(g, q_packed, scales, w2, denom,
+                                     any_push, block=block, axis=axis,
+                                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def pack_int4(q, *, axis=-1):
+    """Two int4 nibbles per int8 byte along the blocked ``axis``."""
+    return _pk.pack_int4(q, axis=axis, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def unpack_int4(p, *, axis=-1):
+    """Inverse of :func:`pack_int4` (exact, sign included)."""
+    return _pk.unpack_int4(p, axis=axis, interpret=_interpret())

@@ -1,0 +1,112 @@
+"""Nibble pack / unpack Pallas kernels (the sub-byte wire path).
+
+PR 2's int4 wire format *billed* 0.5 B/element but still *stored* one int8
+per element, so the physical cross-pod collective moved 2x the bytes the
+cost model claimed.  These kernels make sub-byte formats physically
+sub-byte: two int4 nibbles ride in each int8 byte, so the packed payload
+the collective ships really is half-width.
+
+Layout — nibble pairing is **within one 256-element quantization block**
+(the ``dist/wire.py`` absmax block): packed byte ``k`` of a block holds
+element ``k`` in its low nibble and element ``k + 128`` in its high nibble.
+Pairing inside the block keeps the layout shard-local exactly where the
+blocked layout already is (block boundaries never move), and makes both
+halves of a packed tile contiguous 128-lane rows — no strided even/odd
+gather, just two aligned (SUB, 128) sub-tiles per (SUB, 256) block tile.
+
+Sign convention: nibbles are two's-complement int4 in [-8, 7] (the int4
+wire format only emits [-7, 7]); unpack sign-extends with the
+``(v & 0xF ^ 8) - 8`` identity for the low nibble and an arithmetic shift
+for the high one, so round-trip recovery is exact for every representable
+value.  ``kernels/ref.py`` holds the jnp oracles (also the CPU fallback
+path ``dist/wire.py`` uses when kernel dispatch is off).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256  # quantization block (matches dist/wire.py)
+HALF = 128   # packed bytes per block = one lane row
+SUB = 32     # int8 sublane tile
+LANE = 128
+
+
+def _pack_kernel(q_ref, p_ref):
+    q = q_ref[...].astype(jnp.int32)              # (SUB, BLOCK)
+    lo = q[:, :HALF]
+    hi = q[:, HALF:]
+    v = ((hi & 0xF) << 4) | (lo & 0xF)            # [0, 255]
+    v = jnp.where(v >= 128, v - 256, v)           # two's-complement byte
+    p_ref[...] = v.astype(jnp.int8)
+
+
+def _unpack_kernel(p_ref, q_ref):
+    p = p_ref[...].astype(jnp.int32)              # (SUB, HALF), sign-extended
+    lo = ((p & 0xF) ^ 8) - 8                      # sign-extend low nibble
+    hi = p >> 4                                   # arithmetic shift: high
+    q_ref[...] = jnp.concatenate([lo, hi], axis=1).astype(jnp.int8)
+
+
+def _to_block_rows(q: jnp.ndarray, axis: int, width: int):
+    """Move ``axis`` last and reshape to (rows, width) block rows."""
+    ax = axis % q.ndim
+    if q.shape[ax] % width != 0:
+        raise ValueError(
+            f"axis {ax} of {q.shape} is not a whole number of "
+            f"{width}-wide blocks (blocked payloads are always padded)")
+    if ax != q.ndim - 1:
+        q = jnp.moveaxis(q, ax, -1)
+    lead = q.shape[:-1]
+    return q.reshape(-1, width), lead, ax
+
+
+def _from_block_rows(rows: jnp.ndarray, lead, ax: int, ndim: int):
+    out = rows.reshape(lead + (-1,))
+    if ax != ndim - 1:
+        out = jnp.moveaxis(out, -1, ax)
+    return out
+
+
+def pack_int4(q: jnp.ndarray, *, axis: int = -1,
+              interpret: bool = False) -> jnp.ndarray:
+    """int8 nibbles in [-8, 7] -> packed int8, axis size halved.
+
+    ``axis`` is the blocked axis of the wire layout (size a multiple of
+    ``BLOCK``); every other axis is preserved verbatim, so the pack is
+    exactly as shard-local as the quantization blocks themselves.
+    """
+    rows2, lead, ax = _to_block_rows(q, axis, BLOCK)
+    rows = rows2.shape[0]
+    pad_r = (-rows) % SUB
+    if pad_r:
+        rows2 = jnp.pad(rows2, ((0, pad_r), (0, 0)))
+    packed = pl.pallas_call(
+        _pack_kernel,
+        grid=((rows + pad_r) // SUB,),
+        in_specs=[pl.BlockSpec((SUB, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((SUB, HALF), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad_r, HALF), jnp.int8),
+        interpret=interpret,
+    )(rows2)
+    return _from_block_rows(packed[:rows], lead, ax, q.ndim)
+
+
+def unpack_int4(p: jnp.ndarray, *, axis: int = -1,
+                interpret: bool = False) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: packed int8 -> int8 nibble values."""
+    rows2, lead, ax = _to_block_rows(p, axis, HALF)
+    rows = rows2.shape[0]
+    pad_r = (-rows) % SUB
+    if pad_r:
+        rows2 = jnp.pad(rows2, ((0, pad_r), (0, 0)))
+    q = pl.pallas_call(
+        _unpack_kernel,
+        grid=((rows + pad_r) // SUB,),
+        in_specs=[pl.BlockSpec((SUB, HALF), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((SUB, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad_r, BLOCK), jnp.int8),
+        interpret=interpret,
+    )(rows2)
+    return _from_block_rows(q[:rows], lead, ax, p.ndim)

@@ -88,6 +88,102 @@ def dequantize_int8_ref(q, scales, shape):
     return flat[:n].reshape(shape)
 
 
+def _nibble_join(lo, hi):
+    """Two int4 arrays (int32) -> one two's-complement int8 byte array."""
+    v = ((hi & 0xF) << 4) | (lo & 0xF)
+    return jnp.where(v >= 128, v - 256, v).astype(jnp.int8)
+
+
+def _nibble_split(p):
+    """int8 byte array -> (lo, hi) sign-extended int4 values (int32)."""
+    pr = p.astype(jnp.int32)
+    return ((pr & 0xF) ^ 8) - 8, pr >> 4
+
+
+def pack_nibbles_ref(q, axis=-1, block=256):
+    """Two int4 nibbles per int8 byte, paired within each ``block``.
+
+    Packed byte ``k`` of a block holds element ``k`` (low nibble) and
+    element ``k + block//2`` (high nibble); ``axis`` (a whole number of
+    blocks) halves, every other axis is verbatim — the jnp oracle of
+    ``kernels/pack.py`` and the CPU fallback of the int4 wire format.
+    """
+    ax = axis % q.ndim
+    s = q.shape
+    half = block // 2
+    qr = q.reshape(s[:ax] + (s[ax] // block, 2, half) + s[ax + 1:])
+    lo = jax.lax.index_in_dim(qr, 0, ax + 1, keepdims=False).astype(jnp.int32)
+    hi = jax.lax.index_in_dim(qr, 1, ax + 1, keepdims=False).astype(jnp.int32)
+    v = _nibble_join(lo, hi)
+    return v.reshape(s[:ax] + (s[ax] // 2,) + s[ax + 1:])
+
+
+def unpack_nibbles_ref(p, axis=-1, block=256):
+    """Inverse of :func:`pack_nibbles_ref` (exact, sign included)."""
+    ax = axis % p.ndim
+    s = p.shape
+    half = block // 2
+    pr = p.reshape(s[:ax] + (s[ax] // half, half) + s[ax + 1:])
+    lo, hi = _nibble_split(pr)
+    q = jnp.stack([lo, hi], axis=ax + 1)
+    return q.astype(jnp.int8).reshape(s[:ax] + (s[ax] * 2,) + s[ax + 1:])
+
+
+def pack_tail_ref(q, axis=-1):
+    """Pack a *partial* block of ``rem < 256`` elements into
+    ``ceil(rem/2)`` bytes: byte ``k`` holds element ``k`` (low nibble) and
+    element ``k + ceil(rem/2)`` (high; zero when absent).  The short-block
+    twin of :func:`pack_nibbles_ref`, so a leaf whose blocked axis holds
+    fewer than 256 elements still ships ~0.5 B/element."""
+    ax = axis % q.ndim
+    rem = q.shape[ax]
+    h = (rem + 1) // 2
+    lo = jax.lax.slice_in_dim(q, 0, h, axis=ax).astype(jnp.int32)
+    hi = jax.lax.slice_in_dim(q, h, rem, axis=ax).astype(jnp.int32)
+    if rem - h < h:  # odd rem: the last byte's high nibble is padding
+        widths = [(0, 0)] * q.ndim
+        widths[ax] = (0, h - (rem - h))
+        hi = jnp.pad(hi, widths)
+    return _nibble_join(lo, hi)
+
+
+def unpack_tail_ref(p, rem, axis=-1):
+    """Inverse of :func:`pack_tail_ref` for a tail of ``rem`` elements."""
+    ax = axis % p.ndim
+    lo, hi = _nibble_split(p)
+    q = jnp.concatenate([lo, hi], axis=ax).astype(jnp.int8)
+    return jax.lax.slice_in_dim(q, 0, rem, axis=ax)
+
+
+def canonicalize_packed_ref(p, d, axis=-1, block=256):
+    """Trimmed wire ``q_packed`` -> canonical whole-block packed bytes.
+
+    The wire ships ``(d//block)*block/2 + ceil((d%block)/2)`` bytes (the
+    partial-block tail uses the short pairing); the packed merge kernel
+    tiles whole blocks, so the tail is re-paired into one zero-padded
+    canonical block.  Exact integer ops — a pure layout conversion.
+    Already-canonical inputs (``ceil(d/block)*block/2`` bytes) pass
+    through untouched.
+    """
+    ax = axis % p.ndim
+    half = block // 2
+    nf, rem = d // block, d % block
+    nb = -(-d // block)
+    if p.shape[ax] == nb * half:
+        return p
+    parts = []
+    if nf:
+        parts.append(jax.lax.slice_in_dim(p, 0, nf * half, axis=ax))
+    if rem:
+        tail = jax.lax.slice_in_dim(p, nf * half, p.shape[ax], axis=ax)
+        q_tail = unpack_tail_ref(tail, rem, axis=ax)
+        widths = [(0, 0)] * p.ndim
+        widths[ax] = (0, block - rem)
+        parts.append(pack_nibbles_ref(jnp.pad(q_tail, widths), axis=ax,
+                                      block=block))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=ax)
+
+
 def loss_weighted_update_ref(g, pods, w1, w2, denom, any_push):
     acc = w1 * g.astype(jnp.float32) + jnp.tensordot(
         jnp.asarray(w2, jnp.float32), pods.astype(jnp.float32), axes=(0, 0))
@@ -114,6 +210,9 @@ def dequant_merge_ref(g, q, scales, w2, denom, any_push, *, block=256,
         gf = jnp.moveaxis(gf, ax - 1, -1)
     d = gf.shape[-1]
     nb = scales.shape[-1]
+    if q.shape[-1] != nb * block:  # re-grow the trimmed wire array
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1)
+                    + [(0, nb * block - q.shape[-1])])
     lead = q.shape[:-1]                              # (n_pods, ...)
     deq = q.reshape(lead + (nb, block)).astype(jnp.float32) \
         * scales[..., None]
@@ -123,6 +222,43 @@ def dequant_merge_ref(g, q, scales, w2, denom, any_push, *, block=256,
     merged = acc / denom
     out = jnp.where(jnp.asarray(any_push, bool), merged,
                     gf.astype(jnp.float32))
+    if ax != q.ndim - 1:
+        out = jnp.moveaxis(out, -1, ax - 1)
+    return out.reshape(shape).astype(g.dtype)
+
+
+def dequant_merge_packed_ref(g, q_packed, scales, w2, denom, any_push, *,
+                             block=256, axis=-1):
+    """Fused merge over the nibble-packed int4 payload.
+
+    Mirrors ``dequant_merge.dequant_merge_packed`` operation-for-operation
+    (sequential per-pod accumulation of ``w2_i * (q_i * s_i)`` on top of
+    ``denom * g``), so the kernel is pinned against it **bit-identically**,
+    not just to an allclose tolerance.
+    """
+    shape = g.shape
+    gf = g.reshape(1) if g.ndim == 0 else g
+    ax = axis % q_packed.ndim
+    d_ax = gf.shape[ax - 1] if ax > 0 else gf.shape[ax]
+    q_packed = canonicalize_packed_ref(q_packed, d_ax, axis=ax, block=block)
+    q = unpack_nibbles_ref(q_packed, axis=ax, block=block)
+    if ax != q.ndim - 1:
+        q = jnp.moveaxis(q, ax, -1)
+        scales = jnp.moveaxis(scales, ax, -1)
+        gf = jnp.moveaxis(gf, ax - 1, -1)
+    d = gf.shape[-1]
+    nb = scales.shape[-1]
+    lead = q.shape[:-1]                              # (n_pods, ...)
+    gp = jnp.pad(gf, [(0, 0)] * (gf.ndim - 1) + [(0, nb * block - d)])
+    deq = q.reshape(lead + (nb, block)).astype(jnp.float32) \
+        * scales[..., None].astype(jnp.float32)
+    deq = deq.reshape(lead + (nb * block,))
+    acc = jnp.asarray(denom, jnp.float32) * gp.astype(jnp.float32)
+    for i in range(q.shape[0]):
+        acc = acc + jnp.asarray(w2, jnp.float32)[i] * deq[i]
+    merged = acc / jnp.asarray(denom, jnp.float32)
+    out = jnp.where(jnp.asarray(any_push, bool), merged,
+                    gp.astype(jnp.float32))[..., :d]
     if ax != q.ndim - 1:
         out = jnp.moveaxis(out, -1, ax - 1)
     return out.reshape(shape).astype(g.dtype)

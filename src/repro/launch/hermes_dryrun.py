@@ -30,6 +30,7 @@ audit:
 """
 import argparse
 import json
+import math
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.config import HermesConfig
 from repro.configs import get_config
-from repro.dist.compression import encode_tree
+from repro.dist.compression import encode_tree, payload_bytes
 from repro.dist.hermes_sync import hermes_pod_state, hermes_round
 from repro.launch.mesh import (
     arch_parallel_config, arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
@@ -82,6 +83,78 @@ def _compress_audit(mesh, hcfg, abstract_params, base_shardings):
     return ccost, n_ag, pod_shardings, global_shardings, pod_params
 
 
+def _byte_audit(mesh, abstract_params, formats):
+    """Billing-vs-wire drift audit (ISSUE 5): per wire format, lower the
+    cross-pod *ship* of the encoded push payload — compress the pod-stacked
+    fp32 delta, then constrain the payload to pod-replicated, which forces
+    XLA to emit an all-gather of exactly the arrays that cross the pod
+    axis — and assert the lowered collective's operand bytes equal the
+    registry's billed ``payload_bytes``.  Because billing is now *measured*
+    from ``encode``'s abstract payload, the only way the two can disagree
+    is a layout drift between the per-leaf bill and the stacked wire tree
+    (e.g. stacking changing a leaf's blocked axis), which is exactly the
+    regression class this catches — for every format at once.
+
+    fp32 leaves, matching the Level-A billing convention (the simulator
+    bills fp32 parameter trees; ``NoneFormat`` ships the leaf dtype
+    verbatim, so a bf16 audit would legitimately halve its bytes).
+    """
+    n_pods = mesh.devices.shape[0]
+    params32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), abstract_params)
+    pod_params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype), params32)
+    pod_sh = jax.tree.map(lambda _: NamedSharding(mesh, PS("pod")), pod_params)
+    rep = jax.tree.map(lambda _: NamedSharding(mesh, PS()), params32)
+    n_elts = sum(math.prod(s.shape) for s in jax.tree.leaves(params32))
+    out = {}
+    for name in formats:
+        def ship_fn(pod_p, w_g, _name=name):
+            delta = jax.tree.map(lambda p, g: p - g[None], pod_p, w_g)
+            payloads, _, _ = encode_tree(delta, mode=_name)
+            # every pod receives every pusher's payload (the PS-receive
+            # view of the merge): replicating over "pod" makes the wire
+            # arrays themselves the all-gather operands.  The sender-side
+            # constraint + optimization barrier pin the crossing point —
+            # without them GSPMD back-propagates the replicated sharding
+            # through the elementwise encode and hoists the all-gather
+            # onto the *fp32 delta*, silently shipping 2-8x the billed
+            # bytes (observed: fp16 shipped fp32 at (2,2,2)); a production
+            # wire sender must pin the boundary the same way.
+            payloads = jax.tree.map(
+                lambda a: jax.lax.with_sharding_constraint(
+                    a, NamedSharding(mesh, PS("pod"))), payloads)
+            payloads = jax.lax.optimization_barrier(payloads)
+            return jax.tree.map(
+                lambda a: jax.lax.with_sharding_constraint(
+                    a, NamedSharding(mesh, PS())), payloads)
+
+        with mesh:
+            jitted = jax.jit(ship_fn, in_shardings=(pod_sh, rep))
+            cost = parse_hlo_cost(
+                jitted.lower(pod_params, params32).compile().as_text())
+        ag_bytes = int(cost.collective_bytes_by_kind.get("all-gather", 0))
+        billed = payload_bytes(params32, name)  # per pod == per device here
+        assert ag_bytes == billed, (
+            f"{name}: lowered cross-pod collective ships {ag_bytes} B/pod "
+            f"but the registry bills {billed} B/pod — wire/billing drift")
+        out[name] = {
+            "billed_bytes_per_pod": billed,
+            "allgather_bytes_per_pod": ag_bytes,
+            "bytes_per_element": round(ag_bytes / n_elts, 6),
+            "collectives": cost.collective_counts,
+        }
+    if "int4" in out and "int8" in out:
+        # the acceptance bar: nibbles + fp32 block scales, physically half
+        # of the int8 payload that PR 2 still shipped for int4
+        assert out["int4"]["allgather_bytes_per_pod"] <= 0.5625 * n_elts, \
+            out["int4"]
+        assert (out["int4"]["allgather_bytes_per_pod"]
+                <= 0.53 * out["int8"]["allgather_bytes_per_pod"]), \
+            (out["int4"], out["int8"])
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -97,6 +170,11 @@ def main() -> None:
                          "identical to never having resized, and that "
                          "the compress step on the regrown mesh stays "
                          "collective-free")
+    ap.add_argument("--byte-audit", action="store_true",
+                    help="billing-vs-wire audit: per wire format, lower "
+                         "the cross-pod payload all-gather and assert its "
+                         "operand bytes equal the billed payload_bytes "
+                         "(int4 must ship <= 0.5625 B/element)")
     args = ap.parse_args()
 
     # (2, 16, 16) at the default 512 forced devices; REPRO_DRYRUN_DEVICES
@@ -106,7 +184,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     parallel = arch_parallel_config(args.arch)
     rules = arch_rules(cfg, mesh, parallel, multi_pod=False, batch=256)
-    hcfg = HermesConfig(alpha=-1.3, beta=0.1, lam=5, compression="int8")
+    # registry default (int4 since ISSUE 5): the headline lowering and the
+    # compress audit both exercise the nibble-packed wire path
+    hcfg = HermesConfig(alpha=-1.3, beta=0.1, lam=5)
 
     key = jax.random.PRNGKey(0)
     abstract_params, param_axes = abstract_init_lm(cfg, key)
@@ -219,6 +299,29 @@ def main() -> None:
             "regrown_compress_all_gathers": re_ag,
             "equivalence": eq,
         }
+
+    if args.byte_audit:
+        from repro.dist.wire import available_formats, block_axis
+
+        rec["byte_audit"] = _byte_audit(mesh, abstract_params,
+                                        available_formats())
+
+        # Block-axis/shard-rule coupling (ROADMAP): the shape-only blocked
+        # axis must coincide with the AxisRules-hinted preference for every
+        # leaf of this arch — i.e. no leaf's chosen axis is sharded-but-
+        # misaligned, which is what keeps the (audited) compress step
+        # collective-free.
+        axes_leaves = jax.tree.leaves(
+            param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        shape_leaves = [s.shape for s in jax.tree.leaves(abstract_params)]
+        drift = [
+            (shape, axes)
+            for shape, axes in zip(shape_leaves, axes_leaves)
+            if block_axis(shape) != block_axis(shape, axes=axes, rules=rules)]
+        assert not drift, (
+            f"{len(drift)} leaves pick a sharded-but-misaligned blocked "
+            f"axis: {drift[:3]}")
+        rec["block_axis_hint_drift"] = len(drift)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -240,6 +240,9 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=-1.3)
     ap.add_argument("--beta", type=float, default=0.1)
     ap.add_argument("--lam", type=int, default=5)
+    ap.add_argument("--compression", default=None,
+                    help="wire format for the push payloads (any registered "
+                         "name; default = HermesConfig default)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--restore", action="store_true")
     args = ap.parse_args()
@@ -247,11 +250,15 @@ def main() -> None:
     cfg = _preset(args.preset)
     opt = OptimizerConfig(name="adamw", lr=args.lr)
     if args.hermes:
+        kw = {} if args.compression is None else {
+            "compression": args.compression}
         hcfg = HermesConfig(alpha=args.alpha, beta=args.beta, lam=args.lam,
-                            eta=1.0)
+                            eta=1.0, **kw)
+        hcfg.validate()
         out = train_hermes(cfg, steps=args.steps, batch=args.batch,
                            seq=args.seq, pods=args.pods, opt_cfg=opt,
                            hcfg=hcfg, ckpt_dir=args.ckpt)
+        out["compression"] = hcfg.compression
     else:
         out = train_single(cfg, steps=args.steps, batch=args.batch,
                            seq=args.seq, opt_cfg=opt, ckpt_dir=args.ckpt,

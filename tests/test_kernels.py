@@ -196,5 +196,10 @@ def test_dequant_merge_matches_fp32_roundtrip_semantics(mode):
     denom = w1 + float(w2.sum())
     recv = g[None] + deq
     want = (w1 * g + jnp.tensordot(w2, recv, axes=(0, 0))) / denom
-    out = ops.dequant_merge(g, p["q"], p["scales"], w2, denom, True, axis=ax)
+    if mode == "int4":  # sub-byte payloads ride the packed merge variant
+        out = ops.dequant_merge_packed(g, p["q_packed"], p["scales"], w2,
+                                       denom, True, axis=ax)
+    else:
+        out = ops.dequant_merge(g, p["q"], p["scales"], w2, denom, True,
+                                axis=ax)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)

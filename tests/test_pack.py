@@ -1,0 +1,268 @@
+"""Nibble-packed int4 wire path: pack/unpack kernels, trimmed payloads,
+packed fused merge, and the payload-bytes-equals-nbytes billing invariant.
+
+Hypothesis twins of the round-trip properties live in test_properties.py;
+everything here is pinned so it runs even without hypothesis installed.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.wire import (
+    BLOCK, Int4Format, available_formats, block_axis, get_format,
+)
+from repro.kernels import dequant_merge as D
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,axis", [
+    ((256,), 0),
+    ((512,), 0),
+    ((3, 512, 5), 1),        # middle axis
+    ((2, 7, 256), 2),        # last axis
+    ((1024, 3), 0),          # leading axis
+])
+def test_pack_unpack_roundtrip_exact(shape, axis):
+    """Every nibble in [-8, 7] — sign included — survives the round trip
+    exactly, through both the Pallas kernels (interpret on CPU) and the
+    jnp oracles, and the two agree byte-for-byte."""
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    q = jnp.asarray(rng.integers(-8, 8, size=shape), jnp.int8)
+    p_ref = ref.pack_nibbles_ref(q, axis=axis)
+    assert p_ref.shape[axis] == shape[axis] // 2
+    assert p_ref.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_nibbles_ref(p_ref, axis=axis)), np.asarray(q))
+    p_k = ops.pack_int4(q, axis=axis)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_ref))
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack_int4(p_k, axis=axis)), np.asarray(q))
+
+
+def test_pack_rejects_partial_blocks():
+    q = jnp.zeros((300,), jnp.int8)
+    with pytest.raises(ValueError, match="whole number"):
+        from repro.kernels import pack as P
+        P.pack_int4(q, axis=0, interpret=True)
+
+
+def test_pack_layout_pairs_within_block():
+    """Packed byte k of a block = element k (lo) | element k+128 (hi) —
+    the pairing never crosses a 256-element quantization block."""
+    q = jnp.arange(512, dtype=jnp.int32) % 15 - 7
+    q = q.astype(jnp.int8)
+    p = np.asarray(ref.pack_nibbles_ref(q, axis=0))
+    qn = np.asarray(q)
+    for b in range(2):
+        for k in range(128):
+            lo = int(qn[b * 256 + k])
+            hi = int(qn[b * 256 + 128 + k])
+            want = ((hi & 0xF) << 4) | (lo & 0xF)
+            want = want - 256 if want >= 128 else want
+            assert int(p[b * 128 + k]) == want
+
+
+# ---------------------------------------------------------------------------
+# trimmed wire payloads / odd-length edges
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 5, 128, 129, 255, 256, 257, 300, 700])
+def test_int4_odd_length_roundtrip_and_trim(n):
+    fmt = get_format("int4")
+    x = jnp.asarray(np.random.default_rng(n).normal(0, 1, n), jnp.float32)
+    p = fmt.encode(x, rng=jax.random.PRNGKey(n))
+    assert p["q_packed"].shape == (Int4Format.packed_len(n),)
+    xr = fmt.decode(p, x.shape, x.dtype)
+    step = np.repeat(np.asarray(p["scales"]), BLOCK)[:n]
+    assert np.all(np.abs(np.asarray(x - xr)) <= step + 1e-6)
+
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_blocked_wire_arrays_never_ship_padding(mode):
+    """The q / q_packed wire arrays carry no block padding: their blocked
+    axis is sized by the real elements (int8) or the paired nibble bytes
+    (int4 — the short-block pairing halves even a 32-wide conv axis), so
+    payload bytes scale with the data, not the block grid."""
+    fmt = get_format(mode)
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 5, 1, 32))  # tiny conv
+    p = fmt.encode(x, rng=jax.random.PRNGKey(1))
+    if mode == "int8":
+        assert p["q"].shape == (5, 5, 1, 32)
+    else:
+        assert p["q_packed"].shape == (5, 5, 1, 16)  # two nibbles per byte
+    xr = fmt.decode(p, x.shape, x.dtype)
+    bound = np.asarray(p["scales"]).max() * (0.5 if mode == "int8" else 1.0)
+    assert np.abs(np.asarray(x - xr)).max() <= bound + 1e-6
+
+
+def test_payload_bytes_equals_nbytes_for_every_registered_format():
+    """The billing invariant behind the dryrun byte audit: for every
+    registered format and a sweep of leaf shapes, ``payload_bytes`` equals
+    the summed ``nbytes`` of what ``encode`` actually emits."""
+    shapes = [(), (1,), (5,), (300,), (256,), (3, 5, 300), (512, 300),
+              (2, 4096, 37)]
+    for name in available_formats():
+        fmt = get_format(name)
+        for shape in shapes:
+            x = jnp.zeros(shape, jnp.float32) + 0.5
+            p = fmt.encode(x, rng=jax.random.PRNGKey(0))
+            measured = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                           for a in p.values())
+            assert fmt.payload_bytes(shape) == measured, (name, shape)
+
+
+# ---------------------------------------------------------------------------
+# packed fused merge
+# ---------------------------------------------------------------------------
+
+def _int4_payload(key, n_pods, shape):
+    delta = jax.random.normal(key, (n_pods,) + shape) * 0.1
+    fmt = get_format("int4")
+    p = fmt.encode(delta, rng=jax.random.fold_in(key, 1))
+    return delta, p, block_axis((n_pods,) + shape)
+
+
+@pytest.mark.parametrize("shape", [(256,), (300,), (7, 130), (512, 300),
+                                   (3, 5, 300)])
+@pytest.mark.parametrize("n_pods", [1, 3])
+def test_packed_merge_bit_identical_to_unpacked_kernel(shape, n_pods):
+    """Packing is a layout change, not a semantics change: the packed
+    merge kernel output equals the unpacked dequant-merge kernel on the
+    jnp-unpacked payload **bit for bit** (same arithmetic, same order)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    g = jax.random.normal(ks[0], shape)
+    _, p, ax = _int4_payload(ks[1], n_pods, shape)
+    fmt = get_format("int4")
+    q = fmt.unpack_payload(p, (n_pods,) + shape)  # trimmed int8 nibbles
+    nb = p["scales"].shape[ax]
+    widths = [(0, 0)] * q.ndim
+    widths[ax] = (0, nb * 256 - q.shape[ax])
+    q = jnp.pad(q, widths)
+    w2 = jnp.abs(jax.random.normal(ks[2], (n_pods,)))
+    denom = 0.7 + float(jnp.sum(w2))
+    for push in (True, False):
+        out_p = D.dequant_merge_packed(g, p["q_packed"], p["scales"], w2,
+                                       denom, push, axis=ax, interpret=True)
+        out_u = D.dequant_merge(g, q, p["scales"], w2, denom, push,
+                                axis=ax, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_u))
+        want = ref.dequant_merge_packed_ref(g, p["q_packed"], p["scales"],
+                                            w2, denom, push, axis=ax)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(want),
+                                   atol=1e-5)
+        if not push:
+            np.testing.assert_allclose(np.asarray(out_p), np.asarray(g),
+                                       atol=1e-7)
+
+
+def test_hermes_merge_int4_kernel_path_consumes_packed_payloads(monkeypatch):
+    """use_kernel + int4 routes through ops.dequant_merge_packed with the
+    half-width payload — never through the unpacked dequant-merge or the
+    fp32 loss-weighted-update kernel."""
+    from repro.dist.hermes_sync import hermes_merge
+
+    calls = {"packed": 0}
+    real = ops.dequant_merge_packed
+
+    def spy_packed(g, q_packed, scales, *a, **kw):
+        ax = kw["axis"]
+        assert q_packed.dtype == jnp.int8
+        # half-width: the packed blocked axis is the trimmed nibble bytes
+        # of the corresponding g axis, not one byte per element
+        d = g.shape[ax - 1]
+        assert q_packed.shape[ax] == Int4Format.packed_len(d) < d
+        calls["packed"] += 1
+        return real(g, q_packed, scales, *a, **kw)
+
+    def forbid(*a, **kw):
+        raise AssertionError("unpacked merge used on the int4 fused path")
+
+    monkeypatch.setattr(ops, "dequant_merge_packed", spy_packed)
+    monkeypatch.setattr(ops, "dequant_merge", forbid)
+    monkeypatch.setattr(ops, "loss_weighted_update", forbid)
+    pods = {"w": jax.random.normal(jax.random.PRNGKey(4), (2, 40, 512))}
+    wg = {"w": jnp.zeros((40, 512))}
+    hermes_merge(pods, jnp.array([True, True]), jnp.array([0.5, 0.6]),
+                 wg, jnp.float32(1.0), compression="int4", use_kernel=True,
+                 rng=jax.random.PRNGKey(0))
+    assert calls["packed"] == 1
+
+
+def test_hermes_merge_int4_fused_matches_decode_merge_path():
+    """The packed fused merge and the jnp decode+merge path agree on the
+    merged global model and the error residual."""
+    from repro.dist.hermes_sync import hermes_merge
+
+    pods = {"w": jax.random.normal(jax.random.PRNGKey(5), (3, 40, 17)),
+            "b": jax.random.normal(jax.random.PRNGKey(6), (3, 512))}
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(7), (40, 17)),
+          "b": jnp.zeros((512,))}
+    gates = jnp.array([True, False, True])
+    losses = jnp.array([0.8, 9.9, 1.2])
+    key = jax.random.PRNGKey(8)
+    _, g1, e1, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.3),
+                                compression="int4", rng=key)
+    _, g2, e2, _ = hermes_merge(pods, gates, losses, wg, jnp.float32(1.3),
+                                compression="int4", use_kernel=True, rng=key)
+    for k in wg:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   atol=1e-5, err_msg=k)
+        np.testing.assert_allclose(np.asarray(e1[k]), np.asarray(e2[k]),
+                                   atol=1e-7, err_msg=k)
+
+
+def test_hermes_round_int4_default_closed_round_bit_identical():
+    """The registry default (int4) through hermes_round's lax.cond: a
+    fully closed round returns its inputs bit-identically with the packed
+    stochastic format configured."""
+    from repro.config import HermesConfig
+    from repro.dist.hermes_sync import hermes_pod_state, hermes_round
+
+    cfg = HermesConfig(alpha=-3.0, window=4, lam=100)
+    assert cfg.compression == "int4"  # the ISSUE-5 default flip
+    n = 2
+    pods = {"w": jax.random.normal(jax.random.PRNGKey(9), (n, 6, 5))}
+    gst = hermes_pod_state(cfg, n)
+    wg = {"w": jax.random.normal(jax.random.PRNGKey(10), (6, 5))}
+    out = hermes_round(pods, gst, jnp.ones((n,)), wg, jnp.float32(1.0), cfg,
+                       rng=jax.random.PRNGKey(0))
+    assert not bool(out["any_push"])
+    np.testing.assert_array_equal(np.asarray(out["w_global"]["w"]),
+                                  np.asarray(wg["w"]))
+
+
+# ---------------------------------------------------------------------------
+# block_axis sharding hint
+# ---------------------------------------------------------------------------
+
+def test_block_axis_hint_prefers_aligned_divisible_axis():
+    """With an AxisRules hint, a sharded-but-misaligned 256-divisible axis
+    loses to an unsharded (or still-aligned) one; without a hint — and
+    when no divisible axis aligns — the shape-only choice stands."""
+    from repro.dist.sharding import AxisRules
+
+    class FakeMesh:  # _shard_factor only reads axis_names + devices.shape
+        axis_names = ("data", "model")
+
+        class _Dev:
+            shape = (1, 16)
+        devices = _Dev()
+
+    rules = AxisRules(rules={"embed": None, "ff": "model"}, mesh=FakeMesh())
+    # shape-only: rightmost divisible axis wins (the ff axis)
+    assert block_axis((4096, 512)) == 1
+    # hinted: ff is sharded 16-way -> 512/16 = 32 is block-misaligned, so
+    # the unsharded 4096 embed axis is preferred
+    assert block_axis((4096, 512), axes=("embed", "ff"), rules=rules) == 0
+    # a sharded axis whose per-shard slice stays block-aligned keeps winning
+    assert block_axis((4096, 8192), axes=("embed", "ff"), rules=rules) == 1
+    # no divisible axis aligns -> fall back to the shape-only choice
+    assert block_axis((300, 512), axes=(None, "ff"), rules=rules) == 1
+    # mesh-free rules degrade to the shape-only path
+    free = AxisRules(rules={"ff": "model"}, mesh=None)
+    assert block_axis((4096, 512), axes=("embed", "ff"), rules=free) == 1

@@ -122,8 +122,10 @@ def test_dist_quantize_roundtrip_bounded(n, scale):
 @given(st.integers(1, 5000))
 @settings(max_examples=40, deadline=None)
 def test_payload_bytes_matches_int8_wire_format(n):
-    """int8 billing = 1 byte/element + one fp32 scale per 256-block, and the
-    ordering int8 < fp16 < none holds for any payload > 8 elements."""
+    """int8 billing is the *measured* wire payload — and because block
+    padding is trimmed off the wire, that is exactly one byte per real
+    element plus one fp32 scale per 256-block, with int8 < fp16 < none for
+    any payload > 8 elements."""
     from repro.dist.compression import compress_tree, payload_bytes
     tree = {"g": jnp.zeros((n,), jnp.float32)}
     nblocks = -(-n // 256)
@@ -143,14 +145,18 @@ def test_int4_stochastic_error_bounded_per_block(n, scale, seed):
     from repro.dist.wire import get_format
     rng = np.random.default_rng(n + seed)
     x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    from repro.kernels import ref
     fmt = get_format("int4")
     p = fmt.encode(x, rng=jax.random.PRNGKey(seed))
     xr = fmt.decode(p, x.shape, x.dtype)
     err = np.abs(np.asarray(x - xr))
     step = np.repeat(np.asarray(p["scales"]), 256)[:n]
     assert np.all(err <= step + 1e-6)
-    assert p["q"].dtype == jnp.int8
-    assert np.abs(np.asarray(p["q"])).max() <= 7
+    # the wire array is nibble-packed; every unpacked nibble is int4
+    assert p["q_packed"].dtype == jnp.int8
+    q = ref.unpack_nibbles_ref(p["q_packed"], axis=0)
+    assert q.shape[0] == 2 * p["q_packed"].shape[0]
+    assert np.abs(np.asarray(q)).max() <= 7
 
 
 @given(st.integers(8, 256), st.integers(0, 2 ** 16))
@@ -176,11 +182,47 @@ def test_int4_stochastic_rounding_unbiased(n, seed):
 @given(st.integers(9, 5000))
 @settings(max_examples=25, deadline=None)
 def test_int4_payload_bytes_below_int8(n):
+    """The packed int4 payload measures the paired nibble bytes — 128 per
+    whole 256-block plus ceil(rem/2) for a final partial block — plus the
+    same scales: strictly below int8's byte-per-element for any n >= 2."""
     from repro.dist.compression import payload_bytes
+    from repro.dist.wire import Int4Format
     tree = {"g": jnp.zeros((n,), jnp.float32)}
     nblocks = -(-n // 256)
-    assert payload_bytes(tree, "int4") == -(-n // 2) + 4 * nblocks
+    assert Int4Format.packed_len(n) == \
+        (n // 256) * 128 + (n % 256 + 1) // 2
+    assert payload_bytes(tree, "int4") == \
+        Int4Format.packed_len(n) + 4 * nblocks
     assert payload_bytes(tree, "int4") < payload_bytes(tree, "int8")
+
+
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip_property(nb, lead, seed):
+    """Nibble pack/unpack recovers every int4 value in [-8, 7] exactly —
+    sign included — for any whole-block axis length and leading shape."""
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-8, 8, size=(lead, nb * 256)), jnp.int8)
+    p = ref.pack_nibbles_ref(q, axis=1)
+    assert p.shape == (lead, nb * 128) and p.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_nibbles_ref(p, axis=1)), np.asarray(q))
+
+
+@given(st.integers(1, 4000), st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_payload_bytes_equals_measured_nbytes_property(n, seed):
+    """For every registered format, the billed payload_bytes equal the
+    summed nbytes of what encode actually emits (padding edges included)."""
+    from repro.dist.wire import available_formats, get_format
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 1, n), jnp.float32)
+    for name in available_formats():
+        fmt = get_format(name)
+        p = fmt.encode(x, rng=jax.random.PRNGKey(seed))
+        measured = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                       for a in p.values())
+        assert fmt.payload_bytes(x.shape) == measured, name
 
 
 @given(st.integers(2, 600), st.integers(0, 2 ** 16))
