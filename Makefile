@@ -14,11 +14,13 @@ test: collect kernel-smoke
 collect:
 	python -m pytest --collect-only -q
 
-# Sub-byte wire gate (ISSUE 5): pack/unpack + packed fused-merge kernels in
-# interpret mode (REPRO_WIRE_KERNEL=1 forces the Pallas path on CPU), then
-# the dryrun byte audit — the lowered cross-pod collective must ship
-# exactly the billed bytes for every registered format, with int4 at
-# <= 0.5625 B/element.
+# Sub-byte wire gate (ISSUE 5/6): pack/unpack + packed fused-merge kernels
+# in interpret mode (REPRO_WIRE_KERNEL=1 forces the Pallas path on CPU),
+# then the dryrun byte audit — both the push-level check (the compress
+# step's collective ships exactly the billed bytes) and the round-level
+# one (the FULL hermes_round lowering crosses the pod axis with exactly
+# the billed payload arrays, int4 <= 0.5625 B/element, closed rounds zero
+# cross-pod collectives) for every registered format.
 kernel-smoke:
 	REPRO_WIRE_KERNEL=1 python benchmarks/kernel_bench.py --smoke
 	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --byte-audit \
@@ -31,8 +33,12 @@ quickstart:
 # real parameter tree and drives a tiny int4 (stochastic-rounding) Hermes
 # run through the compressed push path.  A payload_bytes regression fails
 # this before it can skew the paper's §V-B communication numbers.
+# --wire-bytes additionally lowers the full round on a forced 8-device
+# mesh and asserts round-level int4 <= 0.5625 B/element measured from the
+# cross-pod collectives (results/bench/wire_path.json).
 bench-smoke:
 	python benchmarks/comm_overhead.py --smoke
+	python benchmarks/kernel_bench.py --wire-bytes
 
 # Failure-path gate (DESIGN.md §7): the in-flight pod-shrink/rejoin demos
 # (drop-pod + grow-after-shrink bit-identity, data re-split, checkpoint

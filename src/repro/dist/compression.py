@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.wire import (  # noqa: F401  (re-exported API)
-    BLOCK, WireFormat, available_formats, get_format, register,
-    resolve_kernel_dispatch,
+    BLOCK, WireFormat, available_formats, gather_payloads, get_format,
+    pin_gathered, register, resolve_kernel_dispatch,
 )
 
 Tree = Any
@@ -121,6 +121,25 @@ def encode_tree(tree: Tree, mode: str = "int8", error: Optional[Tree] = None,
             jax.tree.unflatten(treedef, err))
 
 
+def decode_tree(payloads: Tree, template: Tree, mode: str = "int8") -> Tree:
+    """Decode a payload tree back into ``template``'s structure/shapes.
+
+    ``payloads`` is the per-leaf payload-dict tree :func:`encode_tree`
+    emits (possibly after :func:`gather_payloads` shipped it across the
+    pod axis); ``template`` supplies each leaf's shape and dtype.  The
+    receiver side of the wire: decoding *gathered* payloads is
+    value-identical to decoding them before the gather, which is what
+    keeps the unplaced merge the bit-exactness oracle for the
+    payload-gather one.
+    """
+    fmt = get_format(mode)
+    leaves, treedef = jax.tree.flatten(template)
+    p_leaves = treedef.flatten_up_to(payloads)
+    return jax.tree.unflatten(
+        treedef, [fmt.decode(p, leaf.shape, leaf.dtype)
+                  for p, leaf in zip(p_leaves, leaves)])
+
+
 def compress_tree(tree: Tree, mode: str = "int8",
                   error: Optional[Tree] = None, rng=None) -> Tuple[Tree, Tree]:
     """Compress-decompress a payload tree with error feedback.
@@ -137,7 +156,8 @@ def compress_tree(tree: Tree, mode: str = "int8",
 # Billing
 # ---------------------------------------------------------------------------
 
-def payload_bytes(tree: Tree, mode: str = "int8") -> int:
+def payload_bytes(tree: Tree, mode: str = "int8", *,
+                  param_axes: Optional[Tree] = None, rules=None) -> int:
     """Wire bytes for one push of ``tree`` under ``mode``.
 
     *Measured*, per leaf, from the format's own encoded payload
@@ -147,7 +167,19 @@ def payload_bytes(tree: Tree, mode: str = "int8") -> int:
     Leaf dtypes are ignored — the wire format, not the in-memory dtype,
     is billed; ``hermes_dryrun --byte-audit`` proves the lowered
     collective ships exactly these bytes.
+
+    ``param_axes``/``rules`` forward the ``block_axis`` sharding hint per
+    leaf (``param_axes`` mirrors ``tree`` with one logical-axes tuple per
+    leaf); the per-format memo is keyed on the hint-resolved blocked axis,
+    so a placement change re-measures instead of returning a stale bill.
+    Formats that override ``payload_bytes`` without hint support are only
+    reachable on the hint-free path.
     """
     fmt = get_format(mode)
-    return sum(fmt.payload_bytes(leaf.shape)
-               for leaf in jax.tree.leaves(tree))
+    leaves = jax.tree.leaves(tree)
+    if param_axes is None:
+        return sum(fmt.payload_bytes(leaf.shape) for leaf in leaves)
+    axes_leaves = jax.tree.leaves(
+        param_axes, is_leaf=lambda x: isinstance(x, tuple))
+    return sum(fmt.payload_bytes(leaf.shape, axes=axes, rules=rules)
+               for leaf, axes in zip(leaves, axes_leaves))

@@ -39,7 +39,8 @@ import jax.numpy as jnp
 from repro.config import HermesConfig
 from repro.core.gup import gup_gate_jax, gup_state_jax
 from repro.dist.compression import (
-    encode_tree, get_format, resolve_kernel_dispatch,
+    decode_tree, encode_tree, gather_payloads, get_format, pin_gathered,
+    resolve_kernel_dispatch,
 )
 
 Tree = Any
@@ -84,11 +85,91 @@ def _merge_leaf_jnp(g, pods, w1, w2, denom, any_push):
 
     Mirrors ``kernels.ref.loss_weighted_update_ref`` / the fused Pallas
     kernel operation-for-operation so both paths agree to fp32 rounding.
+
+    The accumulation is an unrolled elementwise loop over the static pod
+    count rather than a ``tensordot`` contraction: a dot's contraction
+    dimension is fair game for GSPMD to re-split across the pod mesh axis,
+    which would ship a model-sized fp32 all-reduce right after the packed
+    payload gather — exactly the traffic the gather exists to avoid.
+    Elementwise adds have no contraction to split, so the merge stays
+    local to wherever the gathered operands already live.
+
+    The accumulation runs in a ``lax.fori_loop`` rather than an unrolled
+    Python loop: a while-loop body is compiled as its own computation, so
+    XLA makes the *same* fusion and FMA-contraction choices for it in the
+    gathered and oracle programs — an unrolled multiply-add chain sits in
+    whatever fusion surrounds it, and a product that contracts to an FMA
+    on one side but not the other costs one ulp of bit-identity.
+    (``optimization_barrier`` does not help: XLA's CPU pipeline expands
+    barriers away before fusion.)  Same per-element arithmetic as
+    ``kernels.ref.loss_weighted_update_ref``.
     """
-    acc = w1 * g.astype(jnp.float32) + jnp.tensordot(
-        w2, pods.astype(jnp.float32), axes=(0, 0))
+    gf = g.astype(jnp.float32)
+
+    def _body(i, acc):
+        pod = jax.lax.dynamic_index_in_dim(pods, i, 0, keepdims=False)
+        return acc + w2[i] * pod.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, pods.shape[0], _body, w1 * gf)
     merged = acc / denom
-    return jnp.where(any_push, merged, g.astype(jnp.float32)).astype(g.dtype)
+    return jnp.where(any_push, merged, gf).astype(g.dtype)
+
+
+def _merge_sliced(w_global, payloads, delta, fmt, w1, w2, denom, any_push,
+                  n_pods):
+    """Receiver-side merge over *gathered payload rows*, one pod at a time.
+
+    Decodes pod ``i``'s row of the gathered payload and folds it straight
+    into the accumulator, so no pod-stacked fp32 tree is ever
+    materialized.  Two properties hang on that:
+
+    * **Wire bytes** — every intermediate is per-leaf shaped (no leading
+      pod dimension), so GSPMD has nothing it can re-split over the pod
+      mesh axis; the nibble-packed payload all-gather stays the only
+      model-sized cross-pod traffic.
+    * **Bit-identity** — the gathered and unplaced (oracle) programs run
+      the *same* op graph downstream of the payload arrays, so XLA makes
+      the same fusion/FMA-contraction choices in both and the merge is
+      placement-invariant bit-for-bit.  (An ``optimization_barrier``
+      around the stacked decode does **not** achieve this: XLA's CPU
+      emitter contracts multiply-adds across barriers.)
+
+    Blocked formats tile the rightmost block-divisible axis, so decoding
+    a single pod row of the payload is exactly the row of the stacked
+    decode.  The one exception is a leaf whose blocked axis *is* the pod
+    stacking itself (e.g. stacked scalars): its payload rows are not
+    per-pod, so it takes the stacked decode and is sliced afterwards.
+
+    The decode-and-accumulate runs inside a ``lax.fori_loop`` for the
+    same reason as :func:`_merge_leaf_jnp`: the loop body is its own XLA
+    computation, compiled (and FMA-contracted) identically in the
+    gathered and oracle programs.
+    """
+    g_leaves, treedef = jax.tree.flatten(w_global)
+    p_leaves = treedef.flatten_up_to(payloads)
+    d_leaves = treedef.flatten_up_to(delta)
+    out = []
+    for g, p, dl in zip(g_leaves, p_leaves, d_leaves):
+        sliceable = all(getattr(a, "ndim", 0) >= 1
+                        and int(a.shape[0]) == n_pods
+                        for a in jax.tree.leaves(p))
+        gf = g.astype(jnp.float32)
+        if sliceable:
+            def _body(i, acc, p=p, dl=dl, g=g):
+                p_i = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 0, keepdims=False), p)
+                r = fmt.decode(p_i, tuple(dl.shape[1:]), dl.dtype)
+                return acc + w2[i] * (g + r).astype(jnp.float32)
+        else:
+            def _body(i, acc, p=p, dl=dl, g=g):
+                r = fmt.decode(p, dl.shape, dl.dtype)
+                r_i = jax.lax.dynamic_index_in_dim(r, i, 0, keepdims=False)
+                return acc + w2[i] * (g + r_i).astype(jnp.float32)
+        acc = jax.lax.fori_loop(0, n_pods, _body, w1 * gf)
+        merged = acc / denom
+        out.append(jnp.where(any_push, merged, gf).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
 
 
 def _merge_recv(w_global, recv, w1, w2, denom, any_push, use_kernel):
@@ -109,7 +190,8 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
                  live: Optional[jnp.ndarray] = None,
                  compression: str = "none", error: Optional[Tree] = None,
                  use_kernel: bool = False, rng=None,
-                 track_error: bool = True
+                 track_error: bool = True,
+                 mesh=None, pod_axis: str = "pod"
                  ) -> Tuple[Tree, Tree, Optional[Tree], jnp.ndarray]:
     """One gated loss-weighted merge over pod-stacked parameters.
 
@@ -140,6 +222,19 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
         ``track_error=False`` on the fused-kernel path the payloads are
         never decoded at all — no reconstructed fp32 delta tree exists,
         even outside jit — and ``new_error`` is None.
+      mesh:       optional ``jax.sharding.Mesh`` carrying a ``pod_axis``
+        axis.  With a mesh, the merge ships the *encoded payloads*
+        explicitly across the pod axis (``dist.wire.gather_payloads``:
+        send-side ``PS(pod, U, ...)`` pin + optimization barrier +
+        receive-side ``PS(None, U, ...)``), then merges **locally** from
+        the gathered wire arrays — so the physical cross-pod collective
+        is the nibble-packed ``(q_packed, scales)`` payload, never an
+        implicit fp32 all-reduce that GSPMD would otherwise lower for the
+        merge reduction.  ``mesh=None`` (the default) is the same math
+        with an identity ship and is the bit-exactness oracle: a gather
+        moves values without changing them, so gathered and unplaced
+        merges agree bit-for-bit (``tests/test_round_lowering.py``).
+      pod_axis:   mesh-axis name of the pod stacking (default ``"pod"``).
 
     Returns ``(new_pod_params, new_w_global, new_error, any_push)``.
     Closed-gate pods keep their local parameters and their pending error;
@@ -148,6 +243,7 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
     gates = gates.astype(bool)
     if live is not None:
         gates = gates & live.astype(bool)
+    n_pods = int(gates.shape[0])
     any_push = jnp.any(gates)
     w1 = 1.0 / jnp.maximum(jnp.asarray(L, jnp.float32), _EPS)
     w2 = jnp.where(gates,
@@ -169,11 +265,13 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
             lambda p, g: _gate_zero(p - g[None]), pod_params, w_global)
         err_in = (None if error is None
                   else jax.tree.map(_gate_zero, error))
-        # The decode-side reconstruction is only built when something
-        # consumes it: the error-feedback residual, or the non-fused merge.
-        payloads, rec, residual = encode_tree(
+        # Sender-side: encode, and keep the residual local — error
+        # feedback is each pod's private bookkeeping of what its own wire
+        # dropped, so it never crosses the pod axis.  The decode-side
+        # reconstruction is only built when the residual consumes it.
+        payloads, _, residual = encode_tree(
             delta, compression, error=err_in, rng=rng,
-            with_residual=track_error or not fused)
+            with_residual=track_error)
         if not track_error:
             new_error = None
         elif error is None:
@@ -182,21 +280,24 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
             new_error = jax.tree.map(
                 lambda r, e: jnp.where(_pod_mask(gates, r), r, e),
                 residual, error)
+        # The ship: the encoded wire arrays are what cross the pod axis.
+        payloads = gather_payloads(payloads, mesh, axis=pod_axis,
+                                   n_pods=n_pods)
         if fused:
-            # Payloads flow through the merge: the fused kernel dequantizes
-            # (q, scales) inside its VMEM pass.  A leaf whose blocked axis
-            # is the pod axis itself (stacked scalars) has no per-pod block
-            # layout, so it falls back to the reconstructed form.
+            # Gathered payloads flow through the merge: the fused kernel
+            # dequantizes (q, scales) inside its VMEM pass.  A leaf whose
+            # blocked axis is the pod axis itself (stacked scalars) has no
+            # per-pod block layout, so it falls back to the decoded form.
             from repro.dist.wire import block_axis
-            n_pods = gates.shape[0]
             g_leaves, treedef = jax.tree.flatten(w_global)
             p_leaves = treedef.flatten_up_to(payloads)
             d_leaves = treedef.flatten_up_to(delta)
 
             def _fallback(g, p, dl):
                 r = fmt.decode(p, dl.shape, dl.dtype)
-                return _merge_leaf_jnp(g, g[None] + r, w1, w2, denom,
-                                       any_push)
+                pods = pin_gathered(g[None] + r, mesh, axis=pod_axis,
+                                    n_pods=n_pods)
+                return _merge_leaf_jnp(g, pods, w1, w2, denom, any_push)
 
             merged = [
                 fmt.fused_merge(g, p, w2, denom, any_push)
@@ -204,12 +305,24 @@ def hermes_merge(pod_params: Tree, gates: jnp.ndarray, losses: jnp.ndarray,
                 else _fallback(g, p, dl)
                 for g, p, dl in zip(g_leaves, p_leaves, d_leaves)]
             new_global = jax.tree.unflatten(treedef, merged)
-        else:
+        elif use_kernel:
+            # Kernel merge wants the stacked reconstruction; pin it
+            # pod-replicated so GSPMD cannot re-shard the decode.
+            rec = decode_tree(payloads, delta, compression)
+            rec = pin_gathered(rec, mesh, axis=pod_axis, n_pods=n_pods)
             recv = jax.tree.map(lambda g, d: g[None] + d, w_global, rec)
             new_global = _merge_recv(w_global, recv, w1, w2, denom,
                                      any_push, use_kernel)
+        else:
+            # Receiver-side: decode the *gathered* payloads row by row
+            # and merge locally (see _merge_sliced for why slicewise).
+            new_global = _merge_sliced(w_global, payloads, delta, fmt,
+                                       w1, w2, denom, any_push, n_pods)
     else:
+        # Uncompressed wire: the gate-zeroed replicas themselves are the
+        # payload; they cross the pod axis the same explicit way.
         recv = jax.tree.map(_gate_zero, pod_params)
+        recv = gather_payloads(recv, mesh, axis=pod_axis, n_pods=n_pods)
         new_error = error if track_error else None
         new_global = _merge_recv(w_global, recv, w1, w2, denom,
                                  any_push, use_kernel)
@@ -226,7 +339,8 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
                  live: Optional[jnp.ndarray] = None,
                  error: Optional[Tree] = None,
                  use_kernel: Optional[bool] = None,
-                 rng=None) -> Dict[str, Any]:
+                 rng=None, mesh=None,
+                 pod_axis: str = "pod") -> Dict[str, Any]:
     """One full Level-B round: per-pod Algorithm-1 gates, then the merge.
 
     The gate is the vmapped device twin of ``core.gup.gup_update`` (same
@@ -253,6 +367,13 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
     ``cfg.kernel_dispatch`` and the ``REPRO_WIRE_KERNEL`` env var
     (``dist.compression.resolve_kernel_dispatch``).
 
+    ``mesh``/``pod_axis`` turn on the explicit payload-gather ship inside
+    the merge (see :func:`hermes_merge`): the open branch's only
+    cross-pod collective becomes the all-gather of the encoded wire
+    arrays, and the ``hermes_dryrun --byte-audit`` round-level audit pins
+    its lowered operand bytes to the registry bill.  Unplaced
+    (``mesh=None``) rounds are the bit-exact oracle for gathered ones.
+
     Returns a dict: pod_params, w_global, gup, error, gates, any_push.
     """
     if use_kernel is None:
@@ -276,7 +397,8 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
             pods, gates, pod_losses, wg, L,
             compression=cfg.compression, error=err,
             use_kernel=use_kernel, rng=rng,
-            track_error=cfg.error_feedback)
+            track_error=cfg.error_feedback,
+            mesh=mesh, pod_axis=pod_axis)
         return new_pods, new_global, new_error
 
     def _closed(args):

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import math
 import os
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -157,7 +157,19 @@ class WireFormat:
     def decode(self, payload: Payload, shape, dtype) -> jnp.ndarray:
         raise NotImplementedError
 
-    def payload_bytes(self, shape) -> int:
+    def _encode_hinted(self, x: jnp.ndarray, *, ax: Optional[int] = None,
+                       rng=None) -> Payload:
+        """Billing twin of ``encode`` with the blocked axis forced to
+        ``ax`` (``None`` = the format's own shape-only choice).  The base
+        implementation ignores the hint — formats without a blocked layout
+        bill the same bytes whatever the placement — so plain
+        ``encode(self, x, *, rng=None)`` subclasses stay valid.  Blocked
+        formats override it so a ``block_axis`` AxisRules hint changes the
+        *measured* payload, not just the planned one.
+        """
+        return self.encode(x, rng=rng)
+
+    def payload_bytes(self, shape, *, axes=None, rules=None) -> int:
         """Wire bytes for one leaf of ``shape``: the **measured** size of
         what ``encode`` emits (``sum(arr.nbytes)`` over the payload via
         ``jax.eval_shape`` — block padding included), not a parallel
@@ -166,21 +178,29 @@ class WireFormat:
         physically ships is by construction what gets billed.  Formats
         whose true wire cost differs from their jax payload (e.g. an
         entropy-coded format) may still override.
+
+        ``axes``/``rules`` are the optional ``block_axis`` sharding hint.
+        The memo is keyed on ``(shape, resolved blocked axis)`` — not the
+        shape alone — so a hint that moves the blocked axis re-measures
+        instead of returning the stale shape-only bill (two placements of
+        the same shape may legitimately bill different payloads).
         """
         s = _norm_shape(shape)
-        # per-instance memo: encode is pure in the shape, so one abstract
-        # evaluation per (format, leaf shape) is enough forever
+        ax = block_axis(s, axes=axes, rules=rules)
+        # per-instance memo: encode is pure in (shape, blocked axis), so
+        # one abstract evaluation per (format, shape, axis) is enough
         cache = self.__dict__.setdefault("_measured_bytes", {})
-        got = cache.get(s)
+        key = (s, ax)
+        got = cache.get(key)
         if got is None:
             p = jax.eval_shape(
-                lambda x: self.encode(
-                    x, rng=jax.random.PRNGKey(0) if self.stochastic
+                lambda x: self._encode_hinted(
+                    x, ax=ax, rng=jax.random.PRNGKey(0) if self.stochastic
                     else None),
                 jax.ShapeDtypeStruct(s, jnp.float32))
             got = int(sum(math.prod(a.shape) * a.dtype.itemsize
                           for a in jax.tree.leaves(p)))
-            cache[s] = got
+            cache[key] = got
         return got
 
     # Optional fused-merge hook: merge the payload of a pod-stacked delta
@@ -254,10 +274,16 @@ class BlockedIntFormat(WireFormat):
     def _round(self, y: jnp.ndarray, rng) -> jnp.ndarray:
         return jnp.round(y)
 
-    def _quantize(self, x, rng):
-        """Whole-block quantization: (q_padded, scales, s, ax, d, nb)."""
+    def _quantize(self, x, rng, ax: Optional[int] = None):
+        """Whole-block quantization: (q_padded, scales, s, ax, d, nb).
+
+        ``ax=None`` resolves the blocked axis from the shape alone (the
+        encode/decode contract); billing passes the hint-resolved axis so
+        the measured payload tracks the planned placement.
+        """
         s = _norm_shape(x.shape)
-        ax = block_axis(s)
+        if ax is None:
+            ax = block_axis(s)
         d = s[ax]
         nb = -(-d // BLOCK)
         xb = _pad_axis(x.reshape(s).astype(jnp.float32), ax, nb * BLOCK)
@@ -274,7 +300,10 @@ class BlockedIntFormat(WireFormat):
                 s, ax, d, nb)
 
     def encode(self, x, *, rng=None):
-        q, scale, s, ax, d, nb = self._quantize(x, rng)
+        return self._encode_hinted(x, rng=rng)
+
+    def _encode_hinted(self, x, *, ax=None, rng=None):
+        q, scale, s, ax, d, nb = self._quantize(x, rng, ax)
         idx = (slice(None),) * ax + (slice(0, d),)
         return {"q": q[idx], "scales": scale}
 
@@ -353,8 +382,11 @@ class Int4Format(BlockedIntFormat):
         return (d // BLOCK) * cls.HALF + (d % BLOCK + 1) // 2
 
     def encode(self, x, *, rng=None):
+        return self._encode_hinted(x, rng=rng)
+
+    def _encode_hinted(self, x, *, ax=None, rng=None):
         from repro.kernels import ref
-        q, scale, s, ax, d, nb = self._quantize(x, rng)
+        q, scale, s, ax, d, nb = self._quantize(x, rng, ax)
         nf = d // BLOCK                      # whole blocks
         rem = d % BLOCK
         parts = []
@@ -407,6 +439,207 @@ class Int4Format(BlockedIntFormat):
         return ops.dequant_merge_packed(g, payload["q_packed"],
                                         payload["scales"], w2, denom,
                                         any_push, axis=ax)
+
+
+# ---------------------------------------------------------------------------
+# The cross-pod ship: explicit payload gather
+# ---------------------------------------------------------------------------
+
+def gather_payloads(payloads: Any, mesh, *, axis: str = "pod",
+                    n_pods: Optional[int] = None) -> Any:
+    """Ship an encoded payload tree across the ``axis`` mesh axis.
+
+    This is the production cross-pod collective: every array whose leading
+    dimension is the pod-stacking axis is pinned to ``PS(axis, U, U, ...)``
+    on the send side, passed through ``jax.lax.optimization_barrier``, and
+    re-pinned to ``PS(None, U, U, ...)`` on the receive side — so XLA must
+    lower exactly one all-gather *of the wire arrays themselves* over the
+    pod axis.  The barrier + double constraint is the idiom the dryrun
+    byte audit proved out: without it GSPMD back-propagates the replicated
+    sharding through the elementwise encode and hoists the all-gather onto
+    the fp32 delta, silently shipping 2-8x the billed bytes.  Non-pod
+    dimensions stay ``UNCONSTRAINED`` on both sides, so intra-pod
+    data/model sharding is preserved through the ship (no resharding, no
+    memory blow-up) and the local merge that follows reads gathered
+    payloads in its own layout.
+
+    Identity when ``mesh`` is ``None``, when ``axis`` is not a mesh axis,
+    or when the pod axis has size 1 — the unplaced call is therefore the
+    bit-exactness oracle for the gathered one (a gather moves values, it
+    never changes them).  Arrays whose leading dimension is *not* the pod
+    stacking (``n_pods``) — e.g. the scales of a leaf whose blocked axis
+    is the pod axis itself — are passed through unpinned and left to
+    GSPMD; such leaves take the decode fallback in the merge anyway.
+    """
+    if mesh is None:
+        return payloads
+    names = tuple(getattr(mesh, "axis_names", ()))
+    if axis not in names:
+        return payloads
+    size = int(dict(zip(names, mesh.devices.shape)).get(axis, 1))
+    if size <= 1:
+        return payloads
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    U = PartitionSpec.UNCONSTRAINED
+
+    def _pinnable(a) -> bool:
+        if getattr(a, "ndim", 0) < 1:
+            return False
+        lead = int(a.shape[0])
+        if n_pods is not None and lead != int(n_pods):
+            return False
+        return lead % size == 0
+
+    def _pin(a, spec0):
+        if not _pinnable(a):
+            return a
+        spec = PartitionSpec(spec0, *([U] * (a.ndim - 1)))
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec))
+
+    sent = jax.tree.map(lambda a: _pin(a, axis), payloads)
+    sent = jax.lax.optimization_barrier(sent)
+    return jax.tree.map(lambda a: _pin(a, None), sent)
+
+
+def pin_gathered(tree: Any, mesh, *, axis: str = "pod",
+                 n_pods: Optional[int] = None) -> Any:
+    """Re-assert the receiver-side constraint on values *derived from* a
+    gathered payload tree (the ``PS(None, U, ...)`` half of
+    :func:`gather_payloads`, without the send pin or the barrier).
+
+    Sharding constraints do not flow through arbitrary downstream ops:
+    after the payload all-gather, GSPMD is free to decide that the decode
+    of each pod's slice is cheaper *re-sharded* over the pod axis — each
+    pod dequantizes its own row — which then forces a model-sized fp32
+    collective-permute/all-reduce to recombine the merge terms.  Pinning
+    the decoded (pod-stacked, post-gather) tree pod-replicated keeps the
+    dequant-and-accumulate local, so the packed wire arrays stay the only
+    model-sized traffic crossing ``axis``.  Identity under the same
+    conditions as :func:`gather_payloads`.
+    """
+    if mesh is None:
+        return tree
+    names = tuple(getattr(mesh, "axis_names", ()))
+    if axis not in names:
+        return tree
+    size = int(dict(zip(names, mesh.devices.shape)).get(axis, 1))
+    if size <= 1:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    U = PartitionSpec.UNCONSTRAINED
+
+    def _pin(a):
+        if getattr(a, "ndim", 0) < 1:
+            return a
+        lead = int(a.shape[0])
+        if n_pods is not None and lead != int(n_pods):
+            return a
+        if lead % size != 0:
+            return a
+        spec = PartitionSpec(None, *([U] * (a.ndim - 1)))
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec))
+
+    return jax.tree.map(_pin, tree)
+
+
+# ---------------------------------------------------------------------------
+# Round-level wire audit: what SHOULD cross the pod axis, and did it
+# ---------------------------------------------------------------------------
+
+# jnp dtype name -> HLO shape-string dtype (the subset wire arrays use)
+_HLO_DTYPE = {"float32": "f32", "float16": "f16", "bfloat16": "bf16",
+              "int8": "s8", "uint8": "u8", "int32": "s32", "uint32": "u32",
+              "bool": "pred", "float64": "f64", "int4": "s4", "uint4": "u4"}
+
+
+def wire_operand_specs(tree: Any, mode: str, n_pods: int
+                       ) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """The expected per-device all-gather operands of one round's ship.
+
+    For an unstacked abstract parameter ``tree``, return one
+    ``(hlo_dtype, dims, bytes)`` entry per wire array that a pod-sharded
+    (``PS("pod")``-only) round must gather across the pod axis: each
+    encoded payload array of the ``(n_pods,) + leaf`` stacked tree, as the
+    single-pod row shard ``(1,) + rest`` a sender device holds.  ``none``
+    ships the stacked leaves themselves.  Shapes come from
+    ``jax.eval_shape`` of the format's own ``encode`` — the same
+    measurement ``payload_bytes`` bills — so matching the lowered
+    collective operands against these specs *is* the billing-vs-wire
+    equality proof at round level.
+    """
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((int(n_pods),) + tuple(s.shape),
+                                       s.dtype), tree)
+    if mode == "none":
+        payload_leaves = jax.tree.leaves(stacked)
+    else:
+        fmt = get_format(mode)
+
+        def _enc(t):
+            leaves = jax.tree.leaves(t)
+            rng = jax.random.PRNGKey(0)
+            return [fmt.encode(
+                        leaf,
+                        rng=(jax.random.fold_in(rng, i)
+                             if fmt.stochastic else None))
+                    for i, leaf in enumerate(leaves)]
+
+        payload_leaves = jax.tree.leaves(jax.eval_shape(_enc, stacked))
+    specs = []
+    for a in payload_leaves:
+        if a.ndim < 1 or int(a.shape[0]) != int(n_pods):
+            continue  # not pod-stacked: never pinned, never gathered
+        dims = (1,) + tuple(int(d) for d in a.shape[1:])
+        nbytes = int(a.dtype.itemsize)
+        for d in dims:
+            nbytes *= d
+        specs.append((_HLO_DTYPE.get(a.dtype.name, a.dtype.name),
+                      dims, nbytes))
+    return specs
+
+
+def classify_round_collectives(records: List[Dict], specs,
+                               *, control_bytes: Optional[int] = None,
+                               n_pods: int = 2) -> Dict[str, Any]:
+    """Match a lowered round's cross-pod collective operands against the
+    expected wire specs (:func:`wire_operand_specs`).
+
+    ``records`` are ``HloCost.collective_ops`` entries already filtered to
+    pod-crossing groups (``roofline.hlo_parse.cross_pod_collectives``).
+    Every operand of every record must be either (a) one expected payload
+    array — each spec may match **exactly once**, so a payload that
+    crosses twice or a model-sized fp32 that crosses at all shows up as
+    ``unexpected`` — or (b) scalar control traffic (the merge's
+    ``w2``/``denom``/``any_push`` bookkeeping), bounded by
+    ``control_bytes`` per operand (default ``4 * n_pods + 8``).
+
+    Returns ``{"payload_bytes", "control_bytes", "unmatched_specs",
+    "unexpected"}``; a clean round has empty lists and
+    ``payload_bytes == sum(spec bytes)``.
+    """
+    if control_bytes is None:
+        control_bytes = 4 * int(n_pods) + 8
+    remaining = list(specs)
+    payload_b, control_b = 0, 0
+    unexpected = []
+    for r in records:
+        operands = r.get("operands") or []
+        for o in operands:
+            key = (o["dtype"], tuple(o["dims"]), int(o["bytes"]))
+            if key in remaining:
+                remaining.remove(key)
+                payload_b += key[2]
+            elif int(o["bytes"]) <= control_bytes:
+                control_b += int(o["bytes"])
+            else:
+                unexpected.append({"kind": r["kind"], "name": r["name"],
+                                   "operand": o})
+    return {"payload_bytes": int(payload_b),
+            "control_bytes": int(control_b),
+            "unmatched_specs": remaining,
+            "unexpected": unexpected}
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,14 @@
 """Fused dequant + loss-weighted merge kernel (the compressed-path merge).
 
-Consumes the blocked int8/int4 wire payload ``(q, scales)`` of the
-pod-stacked push deltas *directly* — no dequantized fp32 delta tree is ever
-materialized in HBM.  Per parameter tile:
+This is the **receiver-side local** half of the gather-then-merge split
+(DESIGN.md §3): ``dist.hermes_sync.hermes_merge`` first all-gathers the
+*encoded* ``(q, scales)`` payloads across the pod axis
+(``dist.wire.gather_payloads`` — the only cross-pod traffic of the round),
+then every device runs this kernel on its now-local replica of the stacked
+payload.  Nothing here communicates; the kernel consumes the blocked
+int8/int4 wire payload of the pod-stacked push deltas *directly* — no
+dequantized fp32 delta tree is ever materialized in HBM.  Per parameter
+tile:
 
     out = any_push ? g + (Σ_i w2_i · q_i·s_i) / denom : g
 

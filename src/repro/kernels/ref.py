@@ -185,8 +185,14 @@ def canonicalize_packed_ref(p, d, axis=-1, block=256):
 
 
 def loss_weighted_update_ref(g, pods, w1, w2, denom, any_push):
-    acc = w1 * g.astype(jnp.float32) + jnp.tensordot(
-        jnp.asarray(w2, jnp.float32), pods.astype(jnp.float32), axes=(0, 0))
+    # Unrolled elementwise accumulation (not tensordot): keeps the op
+    # sequence identical to dist.hermes_sync._merge_leaf_jnp, whose loop
+    # form exists so GSPMD cannot re-split the reduction over the pod
+    # mesh axis into a model-sized fp32 all-reduce.
+    w2 = jnp.asarray(w2, jnp.float32)
+    acc = w1 * g.astype(jnp.float32)
+    for i in range(pods.shape[0]):
+        acc = acc + w2[i] * pods[i].astype(jnp.float32)
     merged = acc / denom
     return jnp.where(jnp.asarray(any_push, bool), merged,
                      g.astype(jnp.float32)).astype(g.dtype)

@@ -351,11 +351,16 @@ def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
     def pod_specs(tree):
         return jax.tree.map(lambda _: pod_spec, tree)
 
-    def rounds(pods, gup, err, wg, n, start, *, live=None):
-        # placement rides on the committed inputs; no mesh context needed
+    def rounds(pods, gup, err, wg, n, start, *, live=None, m=None):
+        # placement rides on the committed inputs; `m` is the CURRENT
+        # (possibly resized) mesh of those inputs, threaded into
+        # hermes_round so the merge ships encoded payloads explicitly
+        # across its pod axis (m=None: unplaced oracle math, identical
+        # bits — dist.wire.gather_payloads is a value-preserving ship)
         step = jax.jit(
             lambda p, g, e, w, losses, lv: hermes_round(
-                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e))
+                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e,
+                mesh=m))
         np_ = jax.tree.leaves(pods)[0].shape[0]
         lv = (np.ones((np_,), bool) if live is None
               else np.asarray(live, bool))
@@ -374,7 +379,8 @@ def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
     pods = put(pods0, mesh, pod_spec)
     gup = put(gup0, mesh, pod_spec)
     wg = put(wg0, mesh, PS())
-    pods, gup, err, wg = rounds(pods, gup, None, wg, rounds_before, 0)
+    pods, gup, err, wg = rounds(pods, gup, None, wg, rounds_before, 0,
+                                m=mesh)
     snap = {"pods": jax.tree.map(np.asarray, pods),
             "gup": jax.tree.map(np.asarray, gup),
             "err": jax.tree.map(np.asarray, err),
@@ -385,7 +391,7 @@ def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
     live[drop] = False
     dead_pods = jax.tree.map(lambda x: x.at[drop].set(jnp.nan), pods)
     a_pods, a_gup, a_err, a_wg = rounds(
-        dead_pods, gup, err, wg, 1, rounds_before, live=live)
+        dead_pods, gup, err, wg, 1, rounds_before, live=live, m=mesh)
     a_state, a_mesh = elastic_shrink(
         {"pod_params": a_pods, "gup": a_gup, "error": a_err,
          "w_global": a_wg},
@@ -394,10 +400,10 @@ def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
                "error": pod_specs(a_err)})
     a_pods, a_gup, a_err, a_wg = rounds(
         a_state["pod_params"], a_state["gup"], a_state["error"],
-        a_state["w_global"], rounds_after, rounds_before + 1)
+        a_state["w_global"], rounds_after, rounds_before + 1, m=a_mesh)
 
     # path B: shrink at the moment of death, replay the same rounds small
-    b_state, _ = elastic_shrink(
+    b_state, b_mesh = elastic_shrink(
         {"pod_params": jax.tree.map(jnp.asarray, snap["pods"]),
          "gup": jax.tree.map(jnp.asarray, snap["gup"]),
          "error": jax.tree.map(jnp.asarray, snap["err"]),
@@ -408,7 +414,7 @@ def drop_pod_equivalence(*, n_pods: int = 2, drop: int = 1,
                "error": pod_specs(snap["err"])})
     b_pods, b_gup, b_err, b_wg = rounds(
         b_state["pod_params"], b_state["gup"], b_state["error"],
-        b_state["w_global"], 1 + rounds_after, rounds_before)
+        b_state["w_global"], 1 + rounds_after, rounds_before, m=b_mesh)
 
     def check(name, a, b):
         for x, y in zip(jax.tree.leaves(jax.tree.map(np.asarray, a)),
@@ -490,12 +496,14 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
     def pod_specs(tree):
         return jax.tree.map(lambda _: pod_spec, tree)
 
-    def rounds(pods, gup, err, wg, n, start, *, live=None):
+    def rounds(pods, gup, err, wg, n, start, *, live=None, m=None):
         # rows 0..k-1 always map to pods 0..k-1 (the resized pod is last),
-        # so the demo loss schedule stays aligned across every membership
+        # so the demo loss schedule stays aligned across every membership;
+        # `m` is the current mesh of the inputs (see drop_pod_equivalence)
         step = jax.jit(
             lambda p, g, e, w, losses, lv: hermes_round(
-                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e))
+                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e,
+                mesh=m))
         np_ = jax.tree.leaves(pods)[0].shape[0]
         lv = (np.ones((np_,), bool) if live is None
               else np.asarray(live, bool))
@@ -513,12 +521,13 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
     pods = put(pods0, mesh, pod_spec)
     gup = put(gup0, mesh, pod_spec)
     wg = put(wg0, mesh, PS())
-    pods, gup, err, wg = rounds(pods, gup, None, wg, rounds_before, 0)
+    pods, gup, err, wg = rounds(pods, gup, None, wg, rounds_before, 0,
+                                m=mesh)
     live = np.ones((n_pods,), bool)
     live[drop] = False
     pods = jax.tree.map(lambda x: x.at[drop].set(jnp.nan), pods)
     pods, gup, err, wg = rounds(pods, gup, err, wg, 1, rounds_before,
-                                live=live)
+                                live=live, m=mesh)
     snap = {k: jax.tree.map(np.asarray, v)
             for k, v in (("pods", pods), ("gup", gup), ("err", err),
                          ("wg", wg))}
@@ -531,7 +540,7 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
                "error": pod_specs(err)})
     a_pods, a_gup, a_err, a_wg = rounds(
         a_state["pod_params"], a_state["gup"], a_state["error"],
-        a_state["w_global"], rounds_shrunk, rounds_before + 1)
+        a_state["w_global"], rounds_shrunk, rounds_before + 1, m=a_mesh)
     gain = rejoin_gain_rounds(n_pods - 1, float(rounds_after))
     g_state, g_mesh = elastic_grow(
         {"pod_params": a_pods, "gup": a_gup, "error": a_err,
@@ -543,12 +552,12 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
     start_after = rounds_before + 1 + rounds_shrunk
     a_pods, a_gup, a_err, a_wg = rounds(
         g_state["pod_params"], g_state["gup"], g_state["error"],
-        g_state["w_global"], warm, start_after)
+        g_state["w_global"], warm, start_after, m=g_mesh)
     a_warm = {"pods": jax.tree.map(np.asarray, a_pods),
               "wg": jax.tree.map(np.asarray, a_wg)}
     a_pods, a_gup, a_err, a_wg = rounds(
         a_pods, a_gup, a_err, a_wg, rounds_after - warm,
-        start_after + warm)
+        start_after + warm, m=g_mesh)
 
     # path B: never resize — masked rounds, then re-seed the row in place
     # (replayed on the original full mesh so both paths run identically
@@ -559,7 +568,7 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
     b_wg = put(jax.tree.map(jnp.asarray, snap["wg"]), mesh, PS())
     b_pods, b_gup, b_err, b_wg = rounds(
         b_pods, b_gup, b_err, b_wg, rounds_shrunk, rounds_before + 1,
-        live=live)
+        live=live, m=mesh)
     fresh = gup_state_jax(cfg)
     b_pods = jax.tree.map(
         lambda x, g: x.at[drop].set(g.astype(x.dtype)), b_pods, b_wg)
@@ -567,7 +576,7 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
         lambda x, f: x.at[drop].set(f.astype(x.dtype)), b_gup, fresh)
     b_err = jax.tree.map(lambda x: x.at[drop].set(0.0), b_err)
     b_pods, b_gup, b_err, b_wg = rounds(
-        b_pods, b_gup, b_err, b_wg, rounds_after, start_after)
+        b_pods, b_gup, b_err, b_wg, rounds_after, start_after, m=mesh)
 
     # path C: no grow — the incumbents' oracle for the warm-up rounds
     # (only consulted unsharded; see the warmup_checked note below)

@@ -1,0 +1,249 @@
+"""Round-lowering audit: the packed payload-gather merge, proven two ways.
+
+This is the executable proof tier behind ``tests/test_round_lowering.py``
+(DESIGN.md §3/§4): on a small forced-device pod mesh it checks, per wire
+format,
+
+1. **Bit-exactness** (``equivalence``): ``hermes_round`` placed on a
+   ``(pod, data, model)`` mesh — where the merge ships the *encoded*
+   payloads across the pod axis (``dist.wire.gather_payloads``) and merges
+   locally — produces **bit-identical** state to the unplaced jnp oracle,
+   over a multi-round trajectory that exercises open, closed, and
+   mixed-gate rounds, a mid-run ``live``-mask flip, and threaded
+   error-feedback residuals.  A gather moves values without changing them,
+   so any divergence is a lowering bug (historically: non-partitionable
+   threefry splitting the stochastic int4 bits, and asymmetric FMA
+   contraction across the two programs).
+
+2. **Lowered-collective pin** (``lowering_pin``): the optimized HLO of the
+   full round crosses the pod axis with exactly the billed wire arrays —
+   each encoded payload operand gathers **once**, nothing model-sized in
+   fp32 crosses for a compressed format, int4 ships <= 0.5625 B/element —
+   and the closed round (``live`` baked all-False, ``lax.cond`` folded)
+   crosses **nothing**.
+
+3. **Resize cycles** (``resize``): the shrink and grow equivalence
+   harnesses (``launch.elastic.drop_pod_equivalence`` /
+   ``rejoin_pod_equivalence``), run with the packed int4 wire and the mesh
+   threaded into every round, stay bit-identical across a kill -> masked
+   round -> shrink -> re-admit cycle.
+
+Run standalone (writes a JSON report the test tier asserts on):
+
+    REPRO_ROUND_AUDIT_DEVICES=8 python -m repro.launch.round_audit \
+        --out results/dryrun_opt/round_audit.json
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count="
+                      + os.environ.get("REPRO_ROUND_AUDIT_DEVICES", "8"))
+
+import argparse
+import json
+from typing import Any, Dict, List
+
+import numpy as np
+import jax
+
+# Stochastic int4 rounding must draw the SAME bits placed and unplaced;
+# the default non-partitionable threefry keys the draw on the sharding.
+jax.config.update("jax_threefry_partitionable", True)
+
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.config import HermesConfig
+from repro.dist.compression import payload_bytes
+from repro.dist.hermes_sync import hermes_pod_state, hermes_round
+from repro.dist.wire import (
+    available_formats, classify_round_collectives, wire_operand_specs,
+)
+from repro.launch.mesh import make_pod_mesh
+from repro.roofline.hlo_parse import cross_pod_collectives, parse_hlo_cost
+
+N_PODS = 2
+
+
+def _cfg(mode: str) -> HermesConfig:
+    return HermesConfig(alpha=-0.3, beta=0.1, lam=2, window=4,
+                        compression=mode)
+
+
+def _toy(n: int = N_PODS):
+    """One blocked leaf + one short-tail leaf, per-pod distinct."""
+    k1, k2, kg = jax.random.split(jax.random.PRNGKey(0), 3)
+    pods = {"w": jax.random.normal(k1, (n, 4, 512), jnp.float32),
+            "b": jax.random.normal(k2, (n, 7), jnp.float32)}
+    wg = {"w": jax.random.normal(kg, (4, 512), jnp.float32),
+          "b": jnp.zeros((7,), jnp.float32)}
+    return pods, wg
+
+
+def equivalence(mode: str, mesh, n_rounds: int = 6) -> Dict[str, Any]:
+    """Placed (payload-gather) vs unplaced (oracle) multi-round identity."""
+    cfg = _cfg(mode)
+    rng = jax.random.PRNGKey(42)
+
+    def put(tree, spec):
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, spec)), tree)
+
+    def run(mesh_arg, place):
+        pods, wg = _toy()
+        gup = hermes_pod_state(cfg, N_PODS)
+        if place:
+            pods, gup = put(pods, PS("pod")), put(gup, PS("pod"))
+            wg = put(wg, PS())
+        step = jax.jit(lambda p, g, e, w, losses, lv: hermes_round(
+            p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e,
+            rng=rng, mesh=mesh_arg))
+        err, outs = None, []
+        live = np.array([True] * N_PODS)
+        for r in range(n_rounds):
+            # schedule mixes warmup-closed, one-open, and all-open rounds
+            losses = np.array([1.0 - 0.1 * r, 1.2 if r < 3 else 0.3],
+                              np.float32)
+            if r == 4:
+                live = np.array([True, False])  # mid-run membership loss
+            out = step(pods, gup, err, wg, jnp.asarray(losses),
+                       jnp.asarray(live))
+            pods, gup, err, wg = (out["pod_params"], out["gup"],
+                                  out["error"], out["w_global"])
+            outs.append(jax.tree.map(np.asarray, out))
+        return outs
+
+    placed = run(mesh, True)
+    oracle = run(None, False)
+    gates_hist: List[List[bool]] = []
+    for x, y in zip(placed, oracle):
+        gates_hist.append([bool(g) for g in x["gates"]])
+        for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+            np.testing.assert_array_equal(
+                u, v, err_msg=f"{mode}: gathered round diverged from the "
+                              f"unplaced oracle")
+    opens = [any(g) for g in gates_hist]
+    return {"bit_identical": True, "rounds": n_rounds,
+            "gates": gates_hist,
+            "had_closed_round": bool(not all(opens)),
+            "had_open_round": bool(any(opens)),
+            "had_mixed_round": bool(any(any(g) and not all(g)
+                                        for g in gates_hist))}
+
+
+def lowering_pin(mode: str, mesh) -> Dict[str, Any]:
+    """Pin the full round's cross-pod collective schedule in lowered HLO."""
+    cfg = _cfg(mode)
+    n_dev = int(mesh.devices.size)
+    pods, wg = _toy()
+    gup = hermes_pod_state(cfg, N_PODS)
+    sds = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    pod_sh = jax.tree.map(lambda _: NamedSharding(mesh, PS("pod")), pods)
+    gup_sh = jax.tree.map(lambda _: NamedSharding(mesh, PS("pod")), gup)
+    rep = NamedSharding(mesh, PS())
+    rep_tree = jax.tree.map(lambda _: rep, wg)
+    losses = jax.ShapeDtypeStruct((N_PODS,), jnp.float32)
+    rng = jax.random.PRNGKey(0)
+
+    def open_fn(p, g, pl, w):
+        o = hermes_round(p, g, pl, w, jnp.float32(1.0), cfg, rng=rng,
+                         mesh=mesh)
+        return o["pod_params"], o["w_global"], o["any_push"]
+
+    def closed_fn(p, g, pl, w):
+        o = hermes_round(p, g, pl, w, jnp.float32(1.0), cfg,
+                         live=jnp.zeros((N_PODS,), bool), rng=rng,
+                         mesh=mesh)
+        return o["pod_params"], o["w_global"], o["any_push"]
+
+    with mesh:
+        shardings = (pod_sh, gup_sh, rep, rep_tree)
+        cost = parse_hlo_cost(
+            jax.jit(open_fn, in_shardings=shardings)
+            .lower(sds(pods), sds(gup), losses, sds(wg))
+            .compile().as_text())
+        ccost = parse_hlo_cost(
+            jax.jit(closed_fn, in_shardings=shardings)
+            .lower(sds(pods), sds(gup), losses, sds(wg))
+            .compile().as_text())
+
+    recs = cross_pod_collectives(cost, n_dev, N_PODS)
+    specs = wire_operand_specs(wg, mode, N_PODS)
+    cls = classify_round_collectives(recs, specs, n_pods=N_PODS)
+    billed = payload_bytes(wg, mode)
+    n_elts = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(wg))
+    assert not cls["unexpected"], (mode, cls["unexpected"])
+    assert not cls["unmatched_specs"], (mode, cls["unmatched_specs"])
+    assert cls["payload_bytes"] == billed, (mode, cls, billed)
+    closed_cross = cross_pod_collectives(ccost, n_dev, N_PODS)
+    assert not closed_cross, (mode, [r["kind"] for r in closed_cross])
+    return {
+        "billed_bytes_per_pod": int(billed),
+        "round_gather_bytes_per_pod": int(cls["payload_bytes"]),
+        "round_bytes_per_element": round(cls["payload_bytes"] / n_elts, 6),
+        "control_bytes": int(cls["control_bytes"]),
+        "cross_pod_collectives": len(recs),
+        "payload_gathers": len(specs),
+        "unexpected": [],
+        "unmatched_specs": [],
+        "closed_cross_pod_collectives": len(closed_cross),
+    }
+
+
+def resize(mesh) -> Dict[str, Any]:
+    """Shrink and grow cycles with the packed int4 wire, mesh threaded."""
+    from repro.launch.elastic import (
+        drop_pod_equivalence, rejoin_pod_equivalence,
+    )
+    cfg = HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                       compression="int4", min_live_pods=1,
+                       rejoin_cost_rounds=0.5)
+    return {
+        "drop": drop_pod_equivalence(n_pods=N_PODS, drop=1, cfg=cfg,
+                                     mesh=mesh),
+        "rejoin": rejoin_pod_equivalence(n_pods=N_PODS, cfg=cfg, mesh=mesh),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_opt/round_audit.json")
+    ap.add_argument("--modes", default=None,
+                    help="comma-separated wire formats (default: all)")
+    ap.add_argument("--equivalence-modes", default="int4,int8",
+                    help="formats to run the executed placed-vs-oracle "
+                         "rounds for (lowering pins always cover --modes)")
+    ap.add_argument("--pin-only", action="store_true",
+                    help="skip the executed equivalence + resize cycles; "
+                         "lowering pins only (kernel_bench --wire-bytes "
+                         "uses this for the round-level B/element column)")
+    args = ap.parse_args()
+
+    modes = (args.modes.split(",") if args.modes
+             else list(available_formats()))
+    mesh = make_pod_mesh(N_PODS)
+    rec: Dict[str, Any] = {
+        "devices": int(mesh.devices.size),
+        "mesh": list(mesh.devices.shape),
+        "n_pods": N_PODS,
+        "threefry_partitionable": True,
+        "formats": {},
+    }
+    for mode in modes:
+        entry: Dict[str, Any] = {"lowering": lowering_pin(mode, mesh)}
+        if not args.pin_only and mode in args.equivalence_modes.split(","):
+            entry["equivalence"] = equivalence(mode, mesh)
+        rec["formats"][mode] = entry
+    if not args.pin_only:
+        rec["resize"] = resize(mesh)
+    if "int4" in rec["formats"]:
+        low = rec["formats"]["int4"]["lowering"]
+        assert low["round_bytes_per_element"] <= 0.5625, low
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -132,8 +132,18 @@ def train_single(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
 def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                  pods: int, opt_cfg: OptimizerConfig, hcfg: HermesConfig,
                  ckpt_dir: Optional[str] = None, log_every: int = 20,
-                 seed: int = 0) -> Dict:
-    """Level-B Hermes: pod-stacked local training + gated merges."""
+                 seed: int = 0, mesh=None) -> Dict:
+    """Level-B Hermes: pod-stacked local training + gated merges.
+
+    ``mesh`` (a ``(pod, data, model)`` ``jax.sharding.Mesh``, optional)
+    is threaded into every ``hermes_round``: with a mesh the merge ships
+    the *encoded* push payloads explicitly across the pod axis and merges
+    locally (``dist.hermes_sync.hermes_merge``); ``mesh=None`` runs the
+    same math unplaced (single-host demo default) — bit-identical, by the
+    round-lowering test tier.  Placed runs with stochastic int4 need
+    ``jax_threefry_partitionable=True`` for that bit-identity (set by the
+    launch entry points, not here).
+    """
     rng = np.random.default_rng(seed)
     tokens = make_lm_dataset(batch * seq * 40 * pods + batch * seq + 2,
                              cfg.vocab_size, seed=seed)
@@ -195,7 +205,8 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
             out = hermes_round(pod_params, gup, pod_losses, w_global,
                                L_global, hcfg, error=error,
                                rng=jax.random.fold_in(
-                                   jax.random.PRNGKey(seed), i))
+                                   jax.random.PRNGKey(seed), i),
+                               mesh=mesh)
             pod_params, w_global = out["pod_params"], out["w_global"]
             gup, error = out["gup"], out["error"]
             L_global = eval_if_push(out["any_push"], w_global, L_global)

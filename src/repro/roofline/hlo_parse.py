@@ -32,11 +32,18 @@ DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_RG_LITERAL_RE = re.compile(
+    r"replica_groups=\{(\{[\d,]*\}(?:,\{[\d,]*\})*)\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.+?\)?)\s+([\w\-]+)\((.*)$")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _TRIP_RE = re.compile(r"known_trip_count\D*(\d+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_COMP_RE = re.compile(r"(?:true_computation|false_computation)"
+                         r"=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 
@@ -51,6 +58,66 @@ def _loop_read(operand_bytes: int, result_bytes: int, trips: int) -> float:
     if result_bytes > 0 and operand_bytes > 8 * result_bytes and trips > 1:
         return operand_bytes / trips
     return float(operand_bytes)
+
+
+def parse_replica_groups(attrs: str) -> Optional[List[List[int]]]:
+    """Decode a collective's ``replica_groups`` attribute into device-id
+    groups.  Handles both emitted forms: the literal ``{{0,4},{1,5}}`` and
+    the iota ``[4,2]<=[2,4]T(1,0)`` (reshape an arange to the ``<=[dims]``
+    shape, transpose by the ``T`` permutation, flatten row-major, split
+    into the ``[groups, group_size]`` rows).  Returns None when the op
+    carries no parsable groups (callers must treat that conservatively)."""
+    m = _RG_LITERAL_RE.search(attrs)
+    if m:
+        return [[int(x) for x in grp.split(",") if x]
+                for grp in re.findall(r"\{([\d,]*)\}", m.group(1))]
+    m = _RG_IOTA_RE.search(attrs)
+    if m:
+        gshape = [int(x) for x in m.group(1).split(",")]
+        dims = [int(x) for x in m.group(2).split(",")]
+        perm = ([int(x) for x in m.group(3).split(",")] if m.group(3)
+                else list(range(len(dims))))
+        n = 1
+        for d in dims:
+            n *= d
+        # row-major transpose without numpy: flat index -> multi-index in
+        # `dims`, permuted, re-linearized in the permuted shape
+        pdims = [dims[p] for p in perm]
+        flat = [0] * n
+        for src in range(n):
+            idx, rem = [], src
+            for d in reversed(dims):
+                idx.append(rem % d)
+                rem //= d
+            idx = idx[::-1]
+            dst, stride = 0, 1
+            for ax in reversed(range(len(pdims))):
+                dst += idx[perm[ax]] * stride
+                stride *= pdims[ax]
+            flat[dst] = src
+        k = gshape[-1] if gshape else n
+        return [flat[i:i + k] for i in range(0, n, k)]
+    return None
+
+
+def groups_cross_pods(groups: Optional[List[List[int]]],
+                      devices_per_pod: int) -> bool:
+    """True when any replica group spans more than one pod (device ids are
+    pod-major on ``make_pod_mesh`` meshes: pod = id // devices_per_pod).
+    Unparsable groups (None) count as crossing — the audit must stay
+    conservative."""
+    if groups is None:
+        return True
+    dpp = max(1, devices_per_pod)
+    return any(len({d // dpp for d in g}) > 1 for g in groups)
+
+
+def cross_pod_collectives(cost: "HloCost", n_devices: int, n_pods: int
+                          ) -> List[Dict]:
+    """The collective records whose replica groups span pod boundaries."""
+    dpp = max(1, n_devices // max(1, n_pods))
+    return [r for r in cost.collective_ops
+            if groups_cross_pods(r.get("replica_groups"), dpp)]
 
 
 def shape_bytes(type_str: str) -> int:
@@ -87,6 +154,11 @@ class HloCost:
     dot_flops: float = 0.0
     conv_flops: float = 0.0
     bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # one record per collective op: kind, the defining var name, per-operand
+    # (dtype, dims, bytes) specs, total operand bytes, and the parsed
+    # replica groups (None when the op carries none) — the round-level byte
+    # audit classifies cross-pod traffic from these
+    collective_ops: List[Dict] = dataclasses.field(default_factory=list)
 
     def charge(self, op: str, b: float):
         self.bytes += b
@@ -106,6 +178,8 @@ class HloCost:
                 self.collective_bytes_by_kind.get(k, 0.0) + v * times
         for k, v in other.bytes_by_op.items():
             self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * times
+        self.collective_ops.extend(
+            other.collective_ops * max(1, int(times)))
 
 
 def _dot_flops(result_type: str, operand_types: List[str], attrs: str) -> float:
@@ -180,7 +254,7 @@ def parse_hlo_cost(hlo_text: str, entry: Optional[str] = None) -> HloCost:
             m = _OP_RE.match(line)
             if not m:
                 continue
-            _, result_type, op, rest = m.groups()
+            var_name, result_type, op, rest = m.groups()
             # operands: the parenthesized list before ), attrs
             depth, i = 1, 0
             while i < len(rest) and depth > 0:
@@ -272,7 +346,19 @@ def parse_hlo_cost(hlo_text: str, entry: Optional[str] = None) -> HloCost:
                                         trips=loop_trips))
                 cost.add(inner, times=loop_trips)
             elif op in ("call", "custom-call", "conditional"):
-                for called in _CALLS_RE.findall(rest):
+                called_names = _CALLS_RE.findall(rest)
+                # lax.cond lowers to `conditional(...),
+                # branch_computations={%a, %b}` (or true_/false_computation
+                # on two-way conds) — the gated merge's collectives live in
+                # those branches, so missing them undercounts every
+                # open-round collective
+                bm = _BRANCHES_RE.search(rest)
+                if bm:
+                    called_names += [c.strip().lstrip("%")
+                                     for c in bm.group(1).split(",")
+                                     if c.strip()]
+                called_names += _TF_COMP_RE.findall(rest)
+                for called in called_names:
                     if called in computations:
                         cost.add(comp_cost(called, top_level, in_loop, trips))
             elif any(op.startswith(c) for c in COLLECTIVES):
@@ -282,6 +368,23 @@ def parse_hlo_cost(hlo_text: str, entry: Optional[str] = None) -> HloCost:
                 b = sum(shape_bytes(t) for t in types if t)
                 if b == 0:
                     b = op_b  # fall back to result size
+                operands = []
+                for t in types:
+                    for sm in _SHAPE_RE.finditer(t):
+                        dt, dims = sm.group(1), sm.group(2)
+                        if dt not in DTYPE_BYTES:
+                            continue
+                        dl = [int(d) for d in dims.split(",")] if dims else []
+                        nb = DTYPE_BYTES[dt]
+                        for d in dl:
+                            nb *= d
+                        operands.append({"dtype": dt, "dims": dl,
+                                         "bytes": nb})
+                cost.collective_ops.append({
+                    "kind": kind, "name": var_name,
+                    "operands": operands, "operand_bytes": int(b),
+                    "replica_groups": parse_replica_groups(attrs or rest),
+                })
                 cost.collective_bytes += b
                 cost.collective_counts[kind] = \
                     cost.collective_counts.get(kind, 0) + 1
