@@ -1,11 +1,13 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test collect kernel-smoke quickstart bench-smoke elastic-smoke
+.PHONY: test collect kernel-smoke quickstart bench-smoke elastic-smoke \
+	async-smoke
 
-# tier-1 verify (ROADMAP.md); the collect gate and the sub-byte wire
-# kernel smoke run first so layout/billing drift fails before the suite
-test: collect kernel-smoke
+# tier-1 verify (ROADMAP.md); the collect gate, the sub-byte wire kernel
+# smoke, and the pipelined-round smoke run first so layout/billing/overlap
+# drift fails before the suite
+test: collect kernel-smoke async-smoke
 	python -m pytest -x -q
 
 # Import-graph smoke gate: every test module must collect with zero import
@@ -28,6 +30,19 @@ kernel-smoke:
 
 quickstart:
 	python examples/quickstart.py
+
+# Pipelined-round gate (DESIGN.md §8): the async byte audit (the round's
+# one model-sized cross-pod gather lives in the dispatch half and matches
+# the billed wire operands; the closed dispatch and the commit half lower
+# to zero cross-pod collectives; int4 stays <= 0.5625 B/element) plus the
+# staleness-parity/drain accounting, then the sync-vs-async straggler
+# study asserting the async round wall-clock lands strictly below sync on
+# a >=2x heterogeneous cluster.
+async-smoke:
+	REPRO_ROUND_AUDIT_DEVICES=8 python -m repro.launch.round_audit \
+	    --async-only --out results/dryrun_opt/async_round_audit.json
+	python benchmarks/straggler.py --fast --async-only \
+	    --out results/bench/async_overlap_smoke.json
 
 # Billing-regression gate: asserts int4 < int8 < fp16 wire bytes against a
 # real parameter tree and drives a tiny int4 (stochastic-rounding) Hermes

@@ -1,13 +1,35 @@
-"""Paper §V-C / Fig. 12: dynamic dataset sizing vs straggler behavior.
+"""Paper §V-C / Fig. 12: straggler behavior — allocator trace + async rounds.
 
-Runs Hermes and records the allocator trace for the weakest worker family
-(B1ms): dataset size sent over time and the worker's iteration times, which
-should stabilize toward the cluster median (Fig. 11b / 12).
+Two sections:
+
+* ``run()`` — the original Fig. 11b/12 study: Hermes with dynamic dataset
+  sizing, recording the allocator trace for the weakest worker family
+  (B1ms), whose iteration times should stabilize toward the cluster
+  median; plus a BSP control quantifying the straggler wait.
+
+* ``async_overlap()`` — the async double-buffered rounds study
+  (DESIGN.md §8): the same heterogeneous cluster (Table II families span
+  a >=2x iteration-time spread) run sync vs ``async_rounds``, comparing
+  wall-clock per synchronization round and the pipeline-bubble fraction
+  (``RunResult.comm_stall / sim_time``).  Sync bills every push's
+  transfer + PS service + pull serially against the pushing worker;
+  async overlaps the round trip with the next iteration's compute and
+  only bills the residue — so under the same gate trajectory the async
+  round wall-clock must come out strictly below sync.  Results land in
+  ``results/bench/async_overlap.json`` (see BENCH_async_overlap.json at
+  the repo root for a committed reference run).
+
+Usage:
+    python benchmarks/straggler.py [--fast] [--async-only] [--out PATH]
 """
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
+import os
 from typing import Dict
+
+import numpy as np
 
 from repro.config import HermesConfig
 from repro.core.allocator import Allocation
@@ -54,6 +76,97 @@ def run(*, fast: bool = False) -> Dict:
     return out
 
 
+def _mode_stats(r, *, bytes_per_element: float) -> Dict:
+    rounds = max(1, r.ps_updates)
+    return {
+        "sim_time": round(r.sim_time, 3),
+        "iterations": r.iterations,
+        "merges": r.ps_updates,
+        "wall_clock_per_round": round(r.sim_time / rounds, 4),
+        "comm_stall": round(r.comm_stall, 3),
+        "bubble_fraction": round(r.comm_stall / max(r.sim_time, 1e-9), 4),
+        "conv_acc": round(r.conv_acc, 4),
+        "bytes_per_element": round(bytes_per_element, 4),
+    }
+
+
+def async_overlap(*, fast: bool = False, seed: int = 0) -> Dict:
+    """Sync vs async Hermes rounds on a >=2x-heterogeneous cluster."""
+    import jax
+    from repro.dist.compression import payload_bytes
+
+    bundle, _ = make_paper_bundle("mnist", n=2500 if fast else 6000,
+                                  eval_batch=128)
+    n_workers = 6 if fast else 12
+    base = dict(alpha=-1.3, beta=0.1, lam=5, eta=bundle.eta)
+    # fixed data allocation (alloc_every past any horizon): the allocator
+    # would shrink the stragglers' shards toward the median and erode the
+    # very heterogeneity this study measures; fixed iteration budget +
+    # unreachable target so both modes run the same amount of work
+    common = dict(num_workers=n_workers, target_acc=2.0,
+                  max_iterations=500 if fast else 1500,
+                  max_wall=90 if fast else 240,
+                  init_alloc=Allocation(128, 16), alloc_every=1e9,
+                  patience=10 ** 9, seed=seed)
+
+    sync = run_framework("hermes", bundle,
+                         hermes_cfg=HermesConfig(**base), **common)
+    asyn = run_framework(
+        "hermes", bundle,
+        hermes_cfg=HermesConfig(async_rounds=True, **base), **common)
+
+    # the cluster's pod-speed spread, measured from what actually ran
+    means = {w: float(np.mean(v))
+             for w, v in sync.worker_iter_times.items() if v}
+    het = max(means.values()) / min(means.values())
+    assert het >= 2.0, (
+        f"cluster heterogeneity {het:.2f}x below the 2x profile this "
+        f"study requires (Table II families)")
+
+    cfg = HermesConfig(**base)
+    params0 = bundle.init(jax.random.PRNGKey(seed))
+    n_elements = sum(x.size for x in jax.tree.leaves(params0))
+    bpe = payload_bytes(params0, cfg.compression) / n_elements
+
+    s, a = (_mode_stats(sync, bytes_per_element=bpe),
+            _mode_stats(asyn, bytes_per_element=bpe))
+    out = {
+        "workers": n_workers,
+        "heterogeneity_ratio": round(het, 2),
+        "compression": cfg.compression,
+        "bytes_per_element": round(bpe, 4),
+        "sync": s,
+        "async": a,
+        "round_speedup": round(
+            s["wall_clock_per_round"] / a["wall_clock_per_round"], 3),
+    }
+    assert a["wall_clock_per_round"] < s["wall_clock_per_round"], (
+        f"async round wall-clock {a['wall_clock_per_round']} not below "
+        f"sync {s['wall_clock_per_round']}")
+    assert a["bubble_fraction"] < s["bubble_fraction"], (
+        f"async bubble fraction {a['bubble_fraction']} not below "
+        f"sync {s['bubble_fraction']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--async-only", action="store_true",
+                    help="skip the allocator-trace section")
+    ap.add_argument("--out", default="results/bench/async_overlap.json",
+                    help="where the async_overlap section is written")
+    args = ap.parse_args()
+
+    out: Dict = {}
+    if not args.async_only:
+        out["allocator_trace"] = run(fast=args.fast)
+    out["async_overlap"] = async_overlap(fast=args.fast)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out["async_overlap"], f, indent=2)
+    print(json.dumps(out, indent=2))
+
+
 if __name__ == "__main__":
-    import json
-    print(json.dumps(run(), indent=2))
+    main()

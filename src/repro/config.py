@@ -273,6 +273,13 @@ class HermesConfig:
     # and also governs the config-free flat quantize helpers — so CPU CI
     # can exercise the kernel path in interpret mode.
     kernel_dispatch: str = "auto"  # auto | on | off
+    # async double-buffered rounds (DESIGN.md §8): a gate-open round
+    # *dispatches* its packed payload and keeps training; the merged
+    # global lands one round late (staleness-1, absorbed by the per-pod
+    # error-feedback residuals).  Level B pipelines hermes_dispatch /
+    # hermes_commit through train_hermes (--async-rounds); Level A bills
+    # the push transfer concurrently with the next iteration's compute.
+    async_rounds: bool = False
     # elastic membership (DESIGN.md §7).  A member that stops responding is
     # declared dead after failure_timeout_factor x the typical iteration
     # time (the Level-A barrier detection stall and the Level-B liveness

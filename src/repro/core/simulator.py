@@ -62,6 +62,13 @@ class RunResult:
     # failure-path audit trail (nothing may be billed at/after a death)
     meter_events: List[Tuple[Optional[float], str, str, float]] = \
         dataclasses.field(default_factory=list)
+    # simulated seconds workers spent stalled on push/pull round trips:
+    # the serial comm+PS-service wait in a synchronous Hermes round, or —
+    # with HermesConfig.async_rounds — only the residue of an in-flight
+    # round trip that outlived the one iteration of compute it overlapped
+    # with.  comm_stall / sim_time is the pipeline-bubble fraction the
+    # async bench reports (benchmarks/straggler.py).
+    comm_stall: float = 0.0
 
     def wi_table(self) -> Dict[str, float]:
         return {}
@@ -556,6 +563,13 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
     last_alloc_check = 0.0
     latest_times: Dict[str, float] = {}
     prefetch_ready: Dict[int, float] = {}
+    # async double-buffered rounds: {worker: sim_t its in-flight push's
+    # round trip lands}.  The worker keeps computing through one
+    # iteration (staleness-1); the iteration after that may not start
+    # before the merged global is back.
+    merge_ready: Dict[int, float] = {}
+    async_rounds = bool(getattr(hcfg, "async_rounds", False))
+    comm_stall = 0.0
     n_train = env.n_train
     w_global = env.params0
     comp_err: Dict[int, Tree] = {}   # per-worker error-feedback residual
@@ -613,6 +627,9 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
             w.mom = jax.tree.map(jnp.zeros_like, w.mom)
             w.gup = gup_init(hcfg)
             comp_err.pop(i, None)
+            # a pre-death in-flight round trip must not clamp (or bill)
+            # the reborn worker — the elastic flush rule, Level-A form
+            merge_ready.pop(i, None)
             # re-enter the allocator sweep at the median observed
             # iteration time — the newcomer has no fresh measurement yet
             if latest_times:
@@ -653,6 +670,9 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
         gup_trace.append((sim_t, w.spec.name, loss, push))
 
         next_start = sim_t
+        # consume the previous in-flight round trip BEFORE a new push can
+        # start one: its landing time clamps this worker's next iteration
+        pending_back = merge_ready.pop(i, None)
         if push:
             # G measured from w0 (Algorithm 2's Worker-SGD accumulation)
             G = jax.tree.map(lambda w0_, wl: (w0_ - wl) / eta, ps.w0, w.params)
@@ -682,7 +702,18 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
             back = ps_busy_until + env.comm.time(env.params_bytes)
             w.refresh(w_global)
             w.mom = jax.tree.map(jnp.zeros_like, w.mom)
-            next_start = back
+            if async_rounds:
+                # the push transfer + PS service + pull overlap the next
+                # iteration's compute: the worker continues immediately
+                # and only the iteration after next can stall on the
+                # round trip (the merge_ready clamp below).  The state
+                # update stays at this event — the discrete-event model
+                # applies the merge logically here; async changes what
+                # the round trip is *billed* against, not the math.
+                merge_ready[i] = back
+            else:
+                comm_stall += back - sim_t
+                next_start = back
 
         # allocator sweep (asynchronous monitoring).  Dead workers drop out
         # of the sweep entirely: a failed worker's stale latest_times entry
@@ -730,6 +761,12 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
         # next iteration (wait for prefetch only if it hasn't landed)
         if i in prefetch_ready:
             next_start = max(next_start, prefetch_ready.pop(i))
+        if pending_back is not None:
+            # only the residue of the overlapped round trip stalls: a
+            # transfer that finished within one iteration of compute
+            # costs nothing here
+            comm_stall += max(0.0, pending_back - next_start)
+            next_start = max(next_start, pending_back)
         d = w.sim_iteration_time(eval_n)
         itimes[w.spec.name].append(d)
         heapq.heappush(heap, (next_start + d, i, 0, epoch[i]))
@@ -748,14 +785,16 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
         acc_best = env.global_accuracy(w_global)
         history.append((sim_t, acc_best))
     return _result("hermes", env, sim_t, t0, acc_best, reached, stop, history,
-                   itimes, gup_trace, alloc_trace, ps_updates=ps.updates)
+                   itimes, gup_trace, alloc_trace, ps_updates=ps.updates,
+                   comm_stall=comm_stall)
 
 
 # ---------------------------------------------------------------------------
 
 def _result(name: str, env: _Env, sim_t: float, t0: float, acc_best: float,
             reached: bool, stop: _StopCfg, history, itimes, gup_trace,
-            alloc_trace, *, ps_updates: int) -> RunResult:
+            alloc_trace, *, ps_updates: int,
+            comm_stall: float = 0.0) -> RunResult:
     wi = float(np.mean([w.wi() for w in env.workers]))
     return RunResult(
         framework=name,
@@ -776,4 +815,5 @@ def _result(name: str, env: _Env, sim_t: float, t0: float, acc_best: float,
         calls_by_kind=dict(env.meter.calls_by_kind),
         bytes_by_kind=dict(env.meter.bytes_by_kind),
         meter_events=list(env.meter.events),
+        comm_stall=comm_stall,
     )

@@ -42,6 +42,7 @@ from repro.dist.compression import (
     decode_tree, encode_tree, gather_payloads, get_format, pin_gathered,
     resolve_kernel_dispatch,
 )
+from repro.dist.wire import payload_buffer_spec
 
 Tree = Any
 
@@ -416,6 +417,262 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
         "w_global": new_global,
         "gup": new_gup,
         "error": new_error,
+        "gates": gates,
+        "any_push": any_push,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Async double-buffered rounds: dispatch / commit halves (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# ``hermes_round`` is a barrier: every pod stalls on the payload gather
+# before any of them takes another local step.  The pipelined protocol
+# splits the round at exactly that collective:
+#
+#   dispatch(k):  gate -> encode -> *start* the payload gather; return an
+#                 in-flight ``pending`` buffer and keep training.
+#   commit(k):    one round later, merge the gathered round-k payload into
+#                 w_global locally (zero collectives) and refresh the pods
+#                 that pushed at round k.
+#
+# Between dispatch(k) and commit(k) no other commit runs, so the commit
+# sees ``w_global`` exactly as dispatch encoded deltas against it — the
+# merge arithmetic is the *synchronous* round-k merge, executed late.  The
+# only semantic difference from sync is the refresh landing one round of
+# local steps later (staleness-1); the local progress a pushing pod made in
+# between is discarded by the refresh and its quantization residue stays in
+# that pod's private error-feedback residual, so the bias still telescopes.
+#
+# The overlap itself comes from dispatch, commit, and the pod step being
+# *separate* jitted programs: the gather's outputs feed only the commit
+# executable, never the pod step, so the runtime's async dispatch runs the
+# collective concurrently with the next lam local steps.  The round audit
+# (``launch/round_audit.py``) pins this shape in the lowered HLO: the
+# dispatch half carries exactly the billed payload gather (once, inside the
+# ``any_push`` cond), and the commit half lowers with zero cross-pod
+# collectives — the gather is provably off the pod step's critical path.
+
+
+def hermes_dispatch(pod_params: Tree, gup_state: Tree,
+                    pod_losses: jnp.ndarray, w_global: Tree, L: jnp.ndarray,
+                    cfg: HermesConfig, *,
+                    live: Optional[jnp.ndarray] = None,
+                    error: Optional[Tree] = None,
+                    rng=None, mesh=None,
+                    pod_axis: str = "pod") -> Dict[str, Any]:
+    """The dispatch half of a pipelined round: gate, encode, start the ship.
+
+    Runs the same vmapped Algorithm-1 gates as :func:`hermes_round` (same
+    ``live`` masking — a dead pod's gate is forced shut so it never makes
+    it into the wire), then under ``lax.cond(any_push)`` encodes the
+    gate-zeroed deltas with error feedback and starts the payload gather.
+    A fully closed round takes the zeros branch: the pending buffer is a
+    zero payload of the identical :func:`repro.dist.wire.payload_buffer_spec`
+    structure (its gates row is all-False, so the matching commit is the
+    identity) and no cross-pod collective lowers at all.
+
+    The sender-side error residual updates *here*, at encode time — it is
+    the pod's private bookkeeping of what this round's wire dropped and
+    does not wait for the commit.
+
+    Returns a dict:
+
+    * ``gup``/``error``/``gates``/``any_push`` — as in ``hermes_round``.
+    * ``pending`` — the in-flight round: ``{"payload", "gates", "losses",
+      "L", "any_push"}``.  Thread it, unread, through the next ``lam``
+      local steps and hand it to :func:`hermes_commit`; resizes must flush
+      it first (``launch/elastic.py``).
+    """
+    gates, new_gup = jax.vmap(
+        lambda s, x: gup_gate_jax(s, x, cfg))(gup_state, pod_losses)
+    gates = gates.astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
+    n_pods = int(gates.shape[0])
+    any_push = jnp.any(gates)
+    compressed = cfg.compression != "none"
+    track_error = cfg.error_feedback
+    err_in = error if track_error else None
+
+    def _gate_zero(leaf):
+        return jnp.where(_pod_mask(gates, leaf), leaf, jnp.zeros_like(leaf))
+
+    if compressed:
+        def _open(args):
+            pods, wg, err = args
+            delta = jax.tree.map(
+                lambda p, g: _gate_zero(p - g[None]), pods, wg)
+            e_in = None if err is None else jax.tree.map(_gate_zero, err)
+            payloads, _, residual = encode_tree(
+                delta, cfg.compression, error=e_in, rng=rng,
+                with_residual=track_error)
+            if not track_error:
+                new_error = None
+            elif err is None:
+                new_error = jax.tree.map(_gate_zero, residual)
+            else:
+                new_error = jax.tree.map(
+                    lambda r, e: jnp.where(_pod_mask(gates, r), r, e),
+                    residual, err)
+            shipped = gather_payloads(payloads, mesh, axis=pod_axis,
+                                      n_pods=n_pods)
+            return shipped, new_error
+
+        def _closed(args):
+            pods, wg, err = args
+            if track_error and err is None:
+                err = jax.tree.map(jnp.zeros_like, pods)
+            spec = payload_buffer_spec(wg, cfg.compression, n_pods)
+            zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+            zeros = pin_gathered(zeros, mesh, axis=pod_axis, n_pods=n_pods)
+            return zeros, err
+
+        payload, new_error = jax.lax.cond(
+            any_push, _open, _closed, (pod_params, w_global, err_in))
+    else:
+        # Uncompressed wire: the gate-zeroed replicas themselves are the
+        # payload values, shipped in the format's payload-dict structure
+        # so the pending buffer always matches payload_buffer_spec; the
+        # error residual passes through unchanged (a lossless wire drops
+        # nothing).
+        def _open(pods):
+            recv = jax.tree.map(_gate_zero, pods)
+            payloads, _, _ = encode_tree(recv, cfg.compression,
+                                         with_residual=False)
+            return gather_payloads(payloads, mesh, axis=pod_axis,
+                                   n_pods=n_pods)
+
+        def _closed(pods):
+            spec = payload_buffer_spec(w_global, cfg.compression, n_pods)
+            zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+            return pin_gathered(zeros, mesh, axis=pod_axis, n_pods=n_pods)
+
+        payload = jax.lax.cond(any_push, _open, _closed, pod_params)
+        new_error = err_in
+
+    pending = {
+        "payload": payload,
+        "gates": gates,
+        "losses": pod_losses.astype(jnp.float32),
+        "L": jnp.asarray(L, jnp.float32),
+        "any_push": any_push,
+    }
+    return {
+        "gup": new_gup,
+        "error": new_error,
+        "gates": gates,
+        "any_push": any_push,
+        "pending": pending,
+    }
+
+
+def hermes_commit(pod_params: Tree, pending: Dict[str, Any], w_global: Tree,
+                  *, cfg: HermesConfig,
+                  live: Optional[jnp.ndarray] = None,
+                  use_kernel: Optional[bool] = None,
+                  mesh=None, pod_axis: str = "pod") -> Dict[str, Any]:
+    """The commit half: merge an in-flight payload, one round late.
+
+    Re-derives the Algorithm-2 weights from the *dispatch-time* losses
+    carried in ``pending`` (so the merge is arithmetically the synchronous
+    round the payload was encoded for), merges the gathered payload rows
+    into ``w_global`` via the same sliced/fused/kernel machinery as
+    :func:`hermes_merge`, and refreshes the pods whose gates were open at
+    dispatch.  Lowers with **zero** cross-pod collectives: the payload was
+    already gathered by the dispatch half, so the merge is local wherever
+    the rows landed.
+
+    ``live`` re-masks the dispatch-time gates with the *current*
+    membership: a pod that died (or was dropped) after dispatching gets
+    merge weight zero and no refresh, so its in-flight push never merges
+    posthumously — this is the elastic flush rule (``launch/elastic.py``
+    commits a pending buffer under the survivor mask before any resize).
+
+    Returns ``{"pod_params", "w_global", "gates", "any_push"}`` where
+    ``gates``/``any_push`` reflect the live re-mask (``any_push`` False
+    means the commit was the identity).
+    """
+    if use_kernel is None:
+        use_kernel = resolve_kernel_dispatch(
+            getattr(cfg, "kernel_dispatch", "auto"))
+    gates = pending["gates"].astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
+    losses = pending["losses"].astype(jnp.float32)
+    L = pending["L"]
+    n_pods = int(gates.shape[0])
+    any_push = jnp.any(gates)
+    w1 = 1.0 / jnp.maximum(jnp.asarray(L, jnp.float32), _EPS)
+    w2 = jnp.where(gates,
+                   1.0 / jnp.maximum(losses, _EPS), 0.0)
+    denom = w1 + jnp.sum(w2)
+    payload = pending["payload"]
+    compressed = cfg.compression != "none"
+
+    def _open(args):
+        pods, wg = args
+        if compressed:
+            fmt = get_format(cfg.compression)
+            fused = use_kernel and fmt.fused_merge is not None
+            # The merge machinery only reads shapes/dtypes from the delta
+            # tree; the values stayed on the sender.  (A dead-at-commit
+            # pod's payload row was encoded while it was still finite, and
+            # its w2 is zero, so the row contributes an exact 0.)
+            delta_t = jax.tree.map(
+                lambda g: jax.ShapeDtypeStruct((n_pods,) + tuple(g.shape),
+                                               g.dtype), wg)
+            if fused:
+                from repro.dist.wire import block_axis
+                g_leaves, treedef = jax.tree.flatten(wg)
+                p_leaves = treedef.flatten_up_to(payload)
+                d_leaves = treedef.flatten_up_to(delta_t)
+
+                def _fallback(g, p, dl):
+                    r = fmt.decode(p, dl.shape, dl.dtype)
+                    stacked = pin_gathered(g[None] + r, mesh, axis=pod_axis,
+                                           n_pods=n_pods)
+                    return _merge_leaf_jnp(g, stacked, w1, w2, denom,
+                                           any_push)
+
+                merged = [
+                    fmt.fused_merge(g, p, w2, denom, any_push)
+                    if block_axis((n_pods,) + tuple(g.shape)) >= 1
+                    else _fallback(g, p, dl)
+                    for g, p, dl in zip(g_leaves, p_leaves, d_leaves)]
+                new_global = jax.tree.unflatten(treedef, merged)
+            elif use_kernel:
+                rec = decode_tree(payload, delta_t, cfg.compression)
+                rec = pin_gathered(rec, mesh, axis=pod_axis, n_pods=n_pods)
+                recv = jax.tree.map(lambda g, d: g[None] + d, wg, rec)
+                new_global = _merge_recv(wg, recv, w1, w2, denom,
+                                         any_push, use_kernel)
+            else:
+                new_global = _merge_sliced(wg, payload, delta_t, fmt,
+                                           w1, w2, denom, any_push, n_pods)
+        else:
+            # Uncompressed pending payload rows are the replicas themselves,
+            # shipped in the lossless format's payload-dict structure (so
+            # the buffer matches payload_buffer_spec); decoding is identity.
+            rep_t = jax.tree.map(
+                lambda g: jax.ShapeDtypeStruct((n_pods,) + tuple(g.shape),
+                                               g.dtype), wg)
+            recv = decode_tree(payload, rep_t, cfg.compression)
+            new_global = _merge_recv(wg, recv, w1, w2, denom,
+                                     any_push, use_kernel)
+        new_pods = jax.tree.map(
+            lambda p, g: jnp.where(_pod_mask(gates, p), g[None], p),
+            pods, new_global)
+        return new_pods, new_global
+
+    def _closed(args):
+        return args
+
+    new_pods, new_global = jax.lax.cond(
+        any_push, _open, _closed, (pod_params, w_global))
+    return {
+        "pod_params": new_pods,
+        "w_global": new_global,
         "gates": gates,
         "any_push": any_push,
     }

@@ -442,6 +442,44 @@ class Int4Format(BlockedIntFormat):
 
 
 # ---------------------------------------------------------------------------
+# The in-flight round: what a dispatched-but-uncommitted payload looks like
+# ---------------------------------------------------------------------------
+
+def payload_buffer_spec(tree: Any, mode: str, n_pods: int) -> Any:
+    """Abstract spec of one round's in-flight payload buffer.
+
+    For an unstacked parameter ``tree``, return a pytree of
+    ``jax.ShapeDtypeStruct`` mirroring what ``encode_tree`` emits for the
+    ``(n_pods,)``-stacked delta: one payload dict per leaf, with every
+    wire array's post-gather shape and dtype.  This is the double buffer
+    the async pipelined round threads between its dispatch half (producer
+    — the gather of exactly these arrays is started) and its commit half
+    (consumer — the merge reads them one round later): the dispatch
+    ``lax.cond``'s closed branch materializes zeros of this spec so open
+    and closed rounds return one structure, and the audit asserts the
+    gathered operands of the dispatch lowering match these specs.
+
+    Shapes come from ``jax.eval_shape`` of the format's own ``encode`` —
+    the same measurement ``payload_bytes`` bills — so the pending buffer
+    can never drift from the physical wire.
+    """
+    fmt = get_format(mode)
+    leaves, treedef = jax.tree.flatten(tree)
+    stacked = [jax.ShapeDtypeStruct((int(n_pods),) + _norm_shape(x.shape),
+                                    jnp.float32) for x in leaves]
+    rng = jax.random.PRNGKey(0)
+
+    def _enc(xs):
+        return [fmt.encode(
+                    x, rng=(jax.random.fold_in(rng, i)
+                            if fmt.stochastic else None))
+                for i, x in enumerate(xs)]
+
+    payloads = jax.eval_shape(_enc, stacked)
+    return jax.tree.unflatten(treedef, payloads)
+
+
+# ---------------------------------------------------------------------------
 # The cross-pod ship: explicit payload gather
 # ---------------------------------------------------------------------------
 

@@ -66,7 +66,7 @@ from repro.core.allocator import (
 )
 from repro.core.gup import gup_state_jax
 from repro.dist.hermes_sync import (
-    hermes_grow_pod_state, hermes_pod_state, hermes_round,
+    hermes_commit, hermes_grow_pod_state, hermes_pod_state, hermes_round,
 )
 from repro.launch.mesh import (
     arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
@@ -116,6 +116,41 @@ def shrink_pod_tree(tree: Tree, keep: Sequence[int]) -> Tree:
 POD_STACKED_KEYS = ("pod_params", "gup", "error")
 
 
+def flush_pending(state: Dict[str, Any], *,
+                  cfg: Optional[HermesConfig] = None,
+                  live: Optional[Sequence[bool]] = None,
+                  mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """Commit an async in-flight payload before a membership resize.
+
+    The async pipelined loop (DESIGN.md §8) carries a ``pending`` buffer —
+    a dispatched-but-unmerged round — whose arrays are sized to the
+    *current* pod count; a resize would orphan it, and naively merging it
+    afterwards would let a dead pod's in-flight push land posthumously.
+    The rule is: **flush first, under the survivor mask**.
+    ``hermes_commit(live=...)`` re-masks the dispatch-time gates with the
+    current membership, so a dropped pod's payload row gets merge weight
+    zero and no refresh — its push never merges — while the survivors'
+    in-flight contributions land exactly as a synchronous round would
+    have merged them.
+
+    Returns ``state`` with the commit applied to ``pod_params`` /
+    ``w_global`` and ``pending`` cleared (``None``); a state with no
+    pending buffer passes through untouched.  Both resize entry points
+    (``elastic_shrink`` / ``elastic_grow``) call this themselves, so
+    production code only needs it directly for a flush *without* a
+    resize (e.g. draining before a checkpoint).
+    """
+    pending = state.get("pending")
+    if pending is None:
+        return state
+    cfg = cfg or HermesConfig()
+    lv = None if live is None else jnp.asarray(np.asarray(live, bool))
+    cm = hermes_commit(state["pod_params"], pending, state["w_global"],
+                       cfg=cfg, live=lv, mesh=mesh)
+    return {**state, "pod_params": cm["pod_params"],
+            "w_global": cm["w_global"], "pending": None}
+
+
 def _reshard(tree: Tree, spec_tree: Optional[Tree],
              mesh: Optional[Mesh]) -> Tree:
     """device_put a pytree onto ``mesh`` using a PartitionSpec pytree
@@ -143,7 +178,13 @@ def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
     onto the survivors' mesh (``shrink_mesh``) using the PartitionSpec
     pytrees in ``specs`` (absent keys replicate); ``mesh=None`` skips
     placement entirely (single-device / host use).  Refuses to shrink
-    below ``cfg.min_live_pods``.  Returns ``(new_state, survivors_mesh)``.
+    below ``cfg.min_live_pods``.
+
+    An async ``pending`` buffer in ``state`` is flushed first under the
+    survivor mask (:func:`flush_pending`): the dropped pods' in-flight
+    pushes are masked out of the late merge — never applied posthumously
+    — and the survivors' land before their rows migrate.  Returns
+    ``(new_state, survivors_mesh)``.
     """
     cfg = cfg or HermesConfig()
     keep = list(keep)
@@ -151,6 +192,11 @@ def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
         raise ValueError(
             f"shrinking to {len(keep)} pods violates min_live_pods="
             f"{cfg.min_live_pods}")
+    if state.get("pending") is not None:
+        n_pods = jax.tree.leaves(state["pod_params"])[0].shape[0]
+        live = np.zeros((n_pods,), bool)
+        live[np.asarray(keep, int)] = True
+        state = flush_pending(state, cfg=cfg, live=live, mesh=mesh)
     new_mesh = shrink_mesh(mesh, keep) if mesh is not None else None
     out: Dict[str, Any] = {}
     for k, v in state.items():
@@ -200,10 +246,17 @@ def elastic_grow(state: Dict[str, Any], mesh: Optional[Mesh], *,
     policy (``core.allocator.should_readmit``): a rejoin pays a recompile
     + re-shard stall worth ``cfg.rejoin_cost_rounds`` rounds, so when too
     little work remains to amortize it the grow refuses — pass ``None``
-    to bypass the policy (caller already decided).  Returns
+    to bypass the policy (caller already decided).
+
+    An async ``pending`` buffer is flushed first (:func:`flush_pending`,
+    all incumbents live — they all dispatched it): its arrays are sized
+    to the pre-grow pod count, and committing before the append keeps the
+    newcomer out of a merge it never dispatched into.  Returns
     ``(new_state, regrown_mesh)``.
     """
     cfg = cfg or HermesConfig()
+    if state.get("pending") is not None:
+        state = flush_pending(state, cfg=cfg, mesh=mesh)
     w_global = state["w_global"]
     n_pods = jax.tree.leaves(state["pod_params"])[0].shape[0]
     if remaining_rounds is not None and not should_readmit(

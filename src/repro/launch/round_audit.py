@@ -54,9 +54,12 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.config import HermesConfig
 from repro.dist.compression import payload_bytes
-from repro.dist.hermes_sync import hermes_pod_state, hermes_round
+from repro.dist.hermes_sync import (
+    hermes_commit, hermes_dispatch, hermes_pod_state, hermes_round,
+)
 from repro.dist.wire import (
-    available_formats, classify_round_collectives, wire_operand_specs,
+    available_formats, classify_round_collectives, payload_buffer_spec,
+    wire_operand_specs,
 )
 from repro.launch.mesh import make_pod_mesh
 from repro.roofline.hlo_parse import cross_pod_collectives, parse_hlo_cost
@@ -190,6 +193,167 @@ def lowering_pin(mode: str, mesh) -> Dict[str, Any]:
     }
 
 
+def async_pin(mode: str, mesh) -> Dict[str, Any]:
+    """Pin the pipelined round's two halves in lowered HLO (DESIGN.md §8).
+
+    * The **dispatch** half carries exactly the billed payload gather —
+      each encoded wire operand crosses the pod axis once, inside the
+      ``any_push`` cond branch — and lowers to **zero** cross-pod
+      collectives when every gate is provably shut (``live`` all-False).
+    * The **commit** half lowers to **zero** cross-pod collectives
+      unconditionally: the payload it merges was gathered by dispatch, so
+      the merge is local.  Since dispatch/commit/pod-step are separate
+      executables and only the commit consumes the gather's outputs, this
+      is the proof the collective is off the next pod step's critical
+      path.
+    """
+    cfg = _cfg(mode)
+    n_dev = int(mesh.devices.size)
+    pods, wg = _toy()
+    gup = hermes_pod_state(cfg, N_PODS)
+    sds = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    pod_sh = jax.tree.map(lambda _: NamedSharding(mesh, PS("pod")), pods)
+    gup_sh = jax.tree.map(lambda _: NamedSharding(mesh, PS("pod")), gup)
+    rep = NamedSharding(mesh, PS())
+    rep_tree = jax.tree.map(lambda _: rep, wg)
+    losses = jax.ShapeDtypeStruct((N_PODS,), jnp.float32)
+    rng = jax.random.PRNGKey(0)
+
+    def dispatch_fn(p, g, pl, w):
+        o = hermes_dispatch(p, g, pl, w, jnp.float32(1.0), cfg, rng=rng,
+                            mesh=mesh)
+        return o["pending"], o["error"], o["any_push"]
+
+    def dispatch_closed(p, g, pl, w):
+        o = hermes_dispatch(p, g, pl, w, jnp.float32(1.0), cfg,
+                            live=jnp.zeros((N_PODS,), bool), rng=rng,
+                            mesh=mesh)
+        return o["pending"], o["error"], o["any_push"]
+
+    # the in-flight buffer a commit consumes: gathered payload (replicated
+    # over the pod axis, exactly how dispatch's receiver pin leaves it)
+    # plus the dispatch-time gates/losses/L scalars
+    pending_struct = {
+        "payload": payload_buffer_spec(wg, mode, N_PODS),
+        "gates": jax.ShapeDtypeStruct((N_PODS,), jnp.bool_),
+        "losses": jax.ShapeDtypeStruct((N_PODS,), jnp.float32),
+        "L": jax.ShapeDtypeStruct((), jnp.float32),
+        "any_push": jax.ShapeDtypeStruct((), jnp.bool_),
+    }
+    pend_sh = jax.tree.map(lambda _: rep, pending_struct)
+
+    def commit_fn(p, pending, w):
+        o = hermes_commit(p, pending, w, cfg=cfg, mesh=mesh)
+        return o["pod_params"], o["w_global"], o["any_push"]
+
+    with mesh:
+        d_sh = (pod_sh, gup_sh, rep, rep_tree)
+        dcost = parse_hlo_cost(
+            jax.jit(dispatch_fn, in_shardings=d_sh)
+            .lower(sds(pods), sds(gup), losses, sds(wg))
+            .compile().as_text())
+        dccost = parse_hlo_cost(
+            jax.jit(dispatch_closed, in_shardings=d_sh)
+            .lower(sds(pods), sds(gup), losses, sds(wg))
+            .compile().as_text())
+        ccost = parse_hlo_cost(
+            jax.jit(commit_fn, in_shardings=(pod_sh, pend_sh, rep_tree))
+            .lower(sds(pods), pending_struct, sds(wg))
+            .compile().as_text())
+
+    recs = cross_pod_collectives(dcost, n_dev, N_PODS)
+    specs = wire_operand_specs(wg, mode, N_PODS)
+    cls = classify_round_collectives(recs, specs, n_pods=N_PODS)
+    billed = payload_bytes(wg, mode)
+    n_elts = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(wg))
+    assert not cls["unexpected"], (mode, cls["unexpected"])
+    assert not cls["unmatched_specs"], (mode, cls["unmatched_specs"])
+    assert cls["payload_bytes"] == billed, (mode, cls, billed)
+    closed_cross = cross_pod_collectives(dccost, n_dev, N_PODS)
+    assert not closed_cross, (mode, [r["kind"] for r in closed_cross])
+    commit_cross = cross_pod_collectives(ccost, n_dev, N_PODS)
+    assert not commit_cross, (mode, [r["kind"] for r in commit_cross])
+    return {
+        "dispatch_gather_bytes_per_pod": int(cls["payload_bytes"]),
+        "round_bytes_per_element": round(cls["payload_bytes"] / n_elts, 6),
+        "dispatch_cross_pod_collectives": len(recs),
+        "payload_gathers": len(specs),
+        # the gather lowers inside the dispatch program's computations
+        # (the any_push cond branch), never in the commit's
+        "gather_computations": sorted({r.get("computation", "?")
+                                       for r in recs}),
+        "dispatch_closed_cross_pod_collectives": len(closed_cross),
+        "commit_cross_pod_collectives": len(commit_cross),
+    }
+
+
+def async_parity(mode: str, n_rounds: int = 8, tol: float = 0.05
+                 ) -> Dict[str, Any]:
+    """Executed staleness-1 parity + drain accounting (unplaced oracle).
+
+    Runs the same deterministic loss schedule through the synchronous
+    ``hermes_round`` and the pipelined dispatch/commit loop (commit one
+    round late, final drain).  The two trajectories share every gate
+    decision; the async one's refreshes land one round later, so the
+    final global models agree to a staleness tolerance, not bitwise —
+    while the payload *accounting* is exact: every dispatched open round
+    is committed exactly once after the drain.
+    """
+    cfg = _cfg(mode)
+    rng0 = jax.random.PRNGKey(42)
+    schedule = [np.array([1.0 - 0.08 * r, 1.2 if r < 3 else 0.3],
+                         np.float32) for r in range(n_rounds)]
+
+    s_pods, s_wg = _toy()
+    a_pods, a_wg = s_pods, s_wg
+    s_gup = a_gup = hermes_pod_state(cfg, N_PODS)
+    s_err = a_err = None
+    pending = None
+    dispatched = committed = 0
+    sync_opens = []
+    for r, losses in enumerate(schedule):
+        rng = jax.random.fold_in(rng0, r)
+        out = hermes_round(s_pods, s_gup, jnp.asarray(losses), s_wg,
+                           jnp.float32(1.0), cfg, error=s_err, rng=rng,
+                           use_kernel=False)
+        s_pods, s_wg = out["pod_params"], out["w_global"]
+        s_gup, s_err = out["gup"], out["error"]
+        sync_opens.append(bool(out["any_push"]))
+        if pending is not None:
+            cm = hermes_commit(a_pods, pending, a_wg, cfg=cfg,
+                               use_kernel=False)
+            a_pods, a_wg = cm["pod_params"], cm["w_global"]
+            committed += int(cm["any_push"])
+        dp = hermes_dispatch(a_pods, a_gup, jnp.asarray(losses), a_wg,
+                             jnp.float32(1.0), cfg, error=a_err, rng=rng)
+        a_gup, a_err, pending = dp["gup"], dp["error"], dp["pending"]
+        dispatched += int(dp["any_push"])
+    # drain: flush the last in-flight payload
+    cm = hermes_commit(a_pods, pending, a_wg, cfg=cfg, use_kernel=False)
+    a_pods, a_wg = cm["pod_params"], cm["w_global"]
+    committed += int(cm["any_push"])
+
+    # identical gate trajectory (losses are external, GUP state advances
+    # identically), refreshes one round late -> tolerance, not bits
+    diffs = [float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+             for x, y in zip(jax.tree.leaves(s_wg), jax.tree.leaves(a_wg))]
+    max_diff = max(diffs)
+    assert dispatched == committed, (dispatched, committed)
+    assert dispatched == sum(sync_opens), (dispatched, sync_opens)
+    assert max_diff <= tol, (mode, max_diff, tol)
+    return {
+        "rounds": n_rounds,
+        "open_rounds": int(sum(sync_opens)),
+        "dispatched": dispatched,
+        "committed": committed,
+        "drained": True,
+        "final_wg_max_abs_diff": max_diff,
+        "tolerance": tol,
+        "within_tolerance": True,
+    }
+
+
 def resize(mesh) -> Dict[str, Any]:
     """Shrink and grow cycles with the packed int4 wire, mesh threaded."""
     from repro.launch.elastic import (
@@ -217,10 +381,15 @@ def main() -> None:
                     help="skip the executed equivalence + resize cycles; "
                          "lowering pins only (kernel_bench --wire-bytes "
                          "uses this for the round-level B/element column)")
+    ap.add_argument("--async-only", action="store_true",
+                    help="audit only the pipelined dispatch/commit round "
+                         "(lowering pins + staleness parity); the "
+                         "Makefile async-smoke target uses this")
     args = ap.parse_args()
 
     modes = (args.modes.split(",") if args.modes
              else list(available_formats()))
+    eq_modes = args.equivalence_modes.split(",")
     mesh = make_pod_mesh(N_PODS)
     rec: Dict[str, Any] = {
         "devices": int(mesh.devices.size),
@@ -230,15 +399,23 @@ def main() -> None:
         "formats": {},
     }
     for mode in modes:
-        entry: Dict[str, Any] = {"lowering": lowering_pin(mode, mesh)}
-        if not args.pin_only and mode in args.equivalence_modes.split(","):
-            entry["equivalence"] = equivalence(mode, mesh)
+        entry: Dict[str, Any] = {}
+        if not args.async_only:
+            entry["lowering"] = lowering_pin(mode, mesh)
+            if not args.pin_only and mode in eq_modes:
+                entry["equivalence"] = equivalence(mode, mesh)
+        entry["async"] = async_pin(mode, mesh)
+        if not args.pin_only and mode in eq_modes:
+            entry["async"]["parity"] = async_parity(mode)
         rec["formats"][mode] = entry
-    if not args.pin_only:
+    if not args.pin_only and not args.async_only:
         rec["resize"] = resize(mesh)
     if "int4" in rec["formats"]:
-        low = rec["formats"]["int4"]["lowering"]
-        assert low["round_bytes_per_element"] <= 0.5625, low
+        low = rec["formats"]["int4"].get("lowering")
+        if low is not None:
+            assert low["round_bytes_per_element"] <= 0.5625, low
+        a = rec["formats"]["int4"]["async"]
+        assert a["round_bytes_per_element"] <= 0.5625, a
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)

@@ -37,7 +37,9 @@ from repro.configs import get_smoke_config
 from repro.checkpoint import Checkpointer
 from repro.core.gup import gup_state_jax
 from repro.data.synthetic import make_lm_dataset
-from repro.dist.hermes_sync import hermes_pod_state, hermes_round
+from repro.dist.hermes_sync import (
+    hermes_commit, hermes_dispatch, hermes_pod_state, hermes_round,
+)
 from repro.models import init_lm, lm_loss
 from repro.optim import make_optimizer
 
@@ -143,6 +145,18 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     round-lowering test tier.  Placed runs with stochastic int4 need
     ``jax_threefry_partitionable=True`` for that bit-identity (set by the
     launch entry points, not here).
+
+    With ``hcfg.async_rounds`` the loop pipelines the two-phase protocol
+    (DESIGN.md §8): at each boundary it first *commits* the previous
+    round's in-flight payload (merge + staleness-1 refresh — zero
+    collectives), then *dispatches* this round's gates/encode/gather and
+    immediately returns to local steps.  Dispatch, commit, and the pod
+    step are separate jitted programs and the pending payload is only
+    read by the commit, so the runtime overlaps the gather with the next
+    ``lam`` pod steps.  The pending buffer is donated into the commit
+    (it is consumed exactly once), and a final drain commit flushes the
+    last in-flight payload after the loop so every dispatched round
+    merges exactly once.
     """
     rng = np.random.default_rng(seed)
     tokens = make_lm_dataset(batch * seq * 40 * pods + batch * seq + 2,
@@ -191,8 +205,36 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                             lambda: lm_loss(params, eval_batch, cfg),
                             lambda: L_prev)
 
+    async_rounds = bool(getattr(hcfg, "async_rounds", False))
+    if async_rounds:
+        # Separate executables are the overlap mechanism: the gather's
+        # outputs feed only commit_jit, so the runtime's async dispatch
+        # runs the collective while pod_step executes.  The pending
+        # buffer is donated — consumed exactly once — so the in-flight
+        # wire arrays are freed the moment the late merge reads them.
+        commit_jit = jax.jit(
+            lambda pod_params, pending, w_global: hermes_commit(
+                pod_params, pending, w_global, cfg=hcfg, mesh=mesh),
+            donate_argnums=(1,))
+        dispatch_jit = jax.jit(
+            lambda pod_params, gup, pod_losses, w_global, L, error, rng:
+            hermes_dispatch(pod_params, gup, pod_losses, w_global, L,
+                            hcfg, error=error, rng=rng, mesh=mesh))
+
+    def _commit_pending(pod_params, w_global, L_global, pending, counters):
+        merges_dev, committed_dev = counters
+        cm = commit_jit(pod_params, pending, w_global)
+        pod_params, w_global = cm["pod_params"], cm["w_global"]
+        L_global = eval_if_push(cm["any_push"], w_global, L_global)
+        bump = cm["any_push"].astype(jnp.int32)
+        return pod_params, w_global, L_global, (merges_dev + bump,
+                                                committed_dev + bump)
+
     rounds = 0
     merges_dev = jnp.int32(0)      # device-side counter; fetched at logs
+    dispatched_dev = jnp.int32(0)  # async accounting: opens shipped…
+    committed_dev = jnp.int32(0)   # …and opens merged (equal after drain)
+    pending = None                 # the in-flight round (async only)
     t0 = time.time()
     history_dev = []               # (step, device mean loss, device gates)
     for i in range(steps):
@@ -202,23 +244,48 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
         if (i + 1) % hcfg.lam == 0 or i == 0:
             rounds += 1
             pod_losses = pod_eval(pod_params)
-            out = hermes_round(pod_params, gup, pod_losses, w_global,
-                               L_global, hcfg, error=error,
-                               rng=jax.random.fold_in(
-                                   jax.random.PRNGKey(seed), i),
-                               mesh=mesh)
-            pod_params, w_global = out["pod_params"], out["w_global"]
-            gup, error = out["gup"], out["error"]
-            L_global = eval_if_push(out["any_push"], w_global, L_global)
-            merges_dev = merges_dev + out["any_push"].astype(jnp.int32)
-            history_dev.append((i + 1, jnp.mean(pod_losses),
-                                jnp.sum(out["gates"])))
+            rng_i = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+            if async_rounds:
+                # commit round k-1's in-flight payload first (its gather
+                # overlapped the lam steps just taken), then dispatch
+                # round k against the freshly merged global and return to
+                # compute without waiting on the new gather
+                if pending is not None:
+                    (pod_params, w_global, L_global,
+                     (merges_dev, committed_dev)) = _commit_pending(
+                        pod_params, w_global, L_global, pending,
+                        (merges_dev, committed_dev))
+                dp = dispatch_jit(pod_params, gup, pod_losses, w_global,
+                                  L_global, error, rng_i)
+                gup, error, pending = dp["gup"], dp["error"], dp["pending"]
+                dispatched_dev = (dispatched_dev
+                                  + dp["any_push"].astype(jnp.int32))
+                history_dev.append((i + 1, jnp.mean(pod_losses),
+                                    jnp.sum(dp["gates"])))
+            else:
+                out = hermes_round(pod_params, gup, pod_losses, w_global,
+                                   L_global, hcfg, error=error,
+                                   rng=rng_i, mesh=mesh)
+                pod_params, w_global = out["pod_params"], out["w_global"]
+                gup, error = out["gup"], out["error"]
+                L_global = eval_if_push(out["any_push"], w_global, L_global)
+                merges_dev = merges_dev + out["any_push"].astype(jnp.int32)
+                history_dev.append((i + 1, jnp.mean(pod_losses),
+                                    jnp.sum(out["gates"])))
         if (i + 1) % log_every == 0:
             pod_l, gl_l, m = _host_fetch((jnp.mean(losses), L_global,
                                           merges_dev))
             print(f"step {i+1:5d} pod-loss {float(pod_l):.4f} "
                   f"global-L {float(gl_l):.4f} merges={int(m)}/{rounds}",
                   flush=True)
+    # drain: the last dispatched payload has no following boundary, so
+    # flush it here — every open round merges exactly once
+    if pending is not None:
+        (pod_params, w_global, L_global,
+         (merges_dev, committed_dev)) = _commit_pending(
+            pod_params, w_global, L_global, pending,
+            (merges_dev, committed_dev))
+        pending = None
     # one bulk transfer: stack the per-round scalars on device first so
     # the final fetch is two arrays, not thousands of tiny copies
     hist_steps = [s for s, _, _ in history_dev]
@@ -226,9 +293,9 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                  if history_dev else jnp.zeros((0,)))
     hist_gates = (jnp.stack([g for _, _, g in history_dev])
                   if history_dev else jnp.zeros((0,), jnp.int32))
-    gl, pl, merges, hist_loss, hist_gates = _host_fetch(
-        (eval_global(w_global), pod_eval(pod_params), merges_dev,
-         hist_loss, hist_gates))
+    gl, pl, merges, dispatched, committed, hist_loss, hist_gates = \
+        _host_fetch((eval_global(w_global), pod_eval(pod_params), merges_dev,
+                     dispatched_dev, committed_dev, hist_loss, hist_gates))
     gl, merges = float(gl), int(merges)
     pl = [float(x) for x in pl]
     history = [(s, float(l), int(g))
@@ -236,7 +303,10 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     return {"global_loss": gl, "merges": merges, "rounds": rounds,
             "pod_losses": pl, "best_pod_loss": min(pl),
             "history": history, "steps": steps,
-            "comm_fraction": merges / max(rounds, 1)}
+            "comm_fraction": merges / max(rounds, 1),
+            "async_rounds": async_rounds,
+            "dispatched": int(dispatched), "committed": int(committed),
+            "drained": pending is None}
 
 
 def main() -> None:
@@ -254,6 +324,10 @@ def main() -> None:
     ap.add_argument("--compression", default=None,
                     help="wire format for the push payloads (any registered "
                          "name; default = HermesConfig default)")
+    ap.add_argument("--async-rounds", action="store_true",
+                    help="pipeline the rounds: dispatch the packed payload "
+                         "gather and keep training, merge it one round late "
+                         "(staleness-1; DESIGN.md §8)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--restore", action="store_true")
     args = ap.parse_args()
@@ -264,7 +338,7 @@ def main() -> None:
         kw = {} if args.compression is None else {
             "compression": args.compression}
         hcfg = HermesConfig(alpha=args.alpha, beta=args.beta, lam=args.lam,
-                            eta=1.0, **kw)
+                            eta=1.0, async_rounds=args.async_rounds, **kw)
         hcfg.validate()
         out = train_hermes(cfg, steps=args.steps, batch=args.batch,
                            seq=args.seq, pods=args.pods, opt_cfg=opt,

@@ -382,6 +382,11 @@ def parse_hlo_cost(hlo_text: str, entry: Optional[str] = None) -> HloCost:
                                          "bytes": nb})
                 cost.collective_ops.append({
                     "kind": kind, "name": var_name,
+                    # which HLO computation the collective lowered inside:
+                    # the async round audit uses this to show the payload
+                    # gather lives in the dispatch half's cond branch, not
+                    # in any program the next pod step waits on
+                    "computation": name,
                     "operands": operands, "operand_bytes": int(b),
                     "replica_groups": parse_replica_groups(attrs or rest),
                 })

@@ -245,3 +245,53 @@ def test_payload_bytes_memo_hit_is_stable():
     b = fmt.payload_bytes(shape)
     assert a == b
     assert fmt.__dict__["_measured_bytes"] == cache
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (async) round: dispatch carries the gather, commit is local
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", FORMATS)
+def test_async_dispatch_carries_the_only_gather(audit, mode):
+    """The pipelined round's one model-sized cross-pod collective lives in
+    the dispatch half (inside the any_push cond branch), matching the
+    billed wire operands exactly — async_pin asserts the spec match and
+    byte equality before writing these fields."""
+    a = audit["formats"][mode]["async"]
+    assert a["payload_gathers"] >= 1
+    assert a["dispatch_gather_bytes_per_pod"] > 0
+    assert a["gather_computations"], (
+        "payload gather must be attributable to a lowered computation")
+
+
+@pytest.mark.parametrize("mode", FORMATS)
+def test_async_closed_dispatch_and_commit_ship_nothing(audit, mode):
+    """All gates provably shut -> the dispatch half folds to zero cross-pod
+    collectives; the commit half lowers collective-free unconditionally
+    (its payload was already gathered) — the proof the gather is off the
+    next pod step's critical path."""
+    a = audit["formats"][mode]["async"]
+    assert a["dispatch_closed_cross_pod_collectives"] == 0
+    assert a["commit_cross_pod_collectives"] == 0
+
+
+def test_async_int4_round_level_bytes(audit):
+    a = audit["formats"]["int4"]["async"]
+    assert a["round_bytes_per_element"] <= 0.5625
+
+
+def test_async_parity_and_drain_accounting(audit):
+    """Every dispatched round commits exactly once (drain included), and
+    the commit-then-dispatch pipeline tracks the synchronous trajectory
+    within tolerance."""
+    seen = 0
+    for mode, entry in audit["formats"].items():
+        p = entry["async"].get("parity")
+        if p is None:
+            continue
+        seen += 1
+        assert p["dispatched"] == p["committed"] == p["open_rounds"], (
+            mode, p)
+        assert p["drained"] is True
+        assert p["within_tolerance"], (mode, p)
+    assert seen >= 1, "no mode carried a parity section"
