@@ -17,7 +17,6 @@ Suites:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 

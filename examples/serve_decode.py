@@ -6,7 +6,6 @@ mesh.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
-import json
 
 from repro.configs import get_smoke_config
 from repro.launch.serve import serve

@@ -1,0 +1,43 @@
+"""Static round-invariant analyzer over lowered HLO and jaxprs.
+
+One driver, :func:`analyze`, runs registered rules over any jitted entry
+point (DESIGN.md §9).  The shipped rules:
+
+* :class:`CollectivePlacement` — every cross-pod collective operand is a
+  registered wire spec or scalar control traffic
+  (:func:`control_traffic_allowance`); fp32 model-sized crossings (the
+  PR 5 GSPMD hoist) are a named violation class.
+* :class:`DonationAliasing` — ``donate_argnums`` donations (the async
+  ``pending`` buffer, the train state) actually alias in the compiled
+  module's ``input_output_alias`` header.
+* :class:`RetraceGuard` — no host round trips inside round loops (the
+  ``bool(any_push)`` bug class) and no weak-typed jit arguments.
+* :class:`PallasTileLint` — BlockSpec-vs-shape divisibility, dtype
+  minimum tiles, fp32 accumulation, nibble-pack constant pairing.
+
+``launch/analyze.py`` (``make lint-hlo``) runs all of them over every
+entry-point executable on a forced CPU pod mesh.
+"""
+from repro.analysis.collectives import (
+    CollectivePlacement, classify_collectives, control_traffic_allowance,
+)
+from repro.analysis.core import (
+    AnalysisError, Report, Rule, Target, Violation, analyze,
+    available_rules, register_rule,
+)
+from repro.analysis.donation import DonationAliasing, donated_param_numbers
+from repro.analysis.hlo_parse import (
+    HloCost, cross_pod_collectives, parse_hlo_cost,
+    parse_input_output_aliases, parse_replica_groups,
+)
+from repro.analysis.pallas import PallasTileLint
+from repro.analysis.retrace import RetraceGuard
+
+__all__ = [
+    "AnalysisError", "CollectivePlacement", "DonationAliasing", "HloCost",
+    "PallasTileLint", "Report", "RetraceGuard", "Rule", "Target",
+    "Violation", "analyze", "available_rules", "classify_collectives",
+    "control_traffic_allowance", "cross_pod_collectives",
+    "donated_param_numbers", "parse_hlo_cost",
+    "parse_input_output_aliases", "parse_replica_groups", "register_rule",
+]

@@ -1,0 +1,163 @@
+"""Collective-placement rule: what may cross the pod axis, and at what size.
+
+Hermes's communication claim holds only if the ONLY model-sized arrays
+crossing the pod axis are the registered wire payloads
+(``dist.wire.wire_operand_specs``), each exactly once.  This module owns
+the classification that ``dist.wire.classify_round_collectives`` used to
+carry inline, plus the single source of truth for the scalar
+control-traffic allowance (the merge's per-pod ``w2``/``denom``/``any_push``
+bookkeeping): :func:`control_traffic_allowance`.
+
+Named violation classes:
+
+* ``fp32-model-crossing`` — a float32/float64 operand larger than the
+  control allowance crosses the pod axis without matching any wire spec.
+  This is the PR 5 GSPMD regression class: without a sender-side sharding
+  constraint + ``optimization_barrier``, GSPMD back-propagates the
+  receiver's replicated sharding through the elementwise encode and hoists
+  the gather onto the *fp32 delta*, silently shipping 2-8x the billed
+  bytes.
+* ``unexpected-cross-pod-operand`` — any other unmatched above-allowance
+  operand (e.g. a payload crossing twice, a re-gathered decode).
+* ``missing-wire-operand`` — a billed wire array never crossed (merged
+  into something else; the bill no longer describes the wire).
+* ``billing-drift`` — matched payload bytes != the registry's
+  ``payload_bytes`` bill.
+* ``unexpected-cross-pod-collective`` — with ``expect_none=True`` (closed
+  rounds, commit halves, pod-local train steps): ANY pod-crossing
+  collective at all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.analysis.core import Rule, Target, Violation, register_rule
+from repro.analysis.hlo_parse import cross_pod_collectives
+
+# scalar control traffic per collective operand: one 4-byte slot per pod
+# (w2 / denom rows) plus an 8-byte slack for the any_push/predicate pair.
+# Imported by dist.wire and the launch audits — do not duplicate the
+# constant; change it here and every gate moves together.
+CONTROL_SLACK_BYTES = 8
+CONTROL_BYTES_PER_POD = 4
+
+
+def control_traffic_allowance(n_pods: int) -> int:
+    """Max bytes of one cross-pod operand still billed as control, not
+    payload: ``4 * n_pods + 8``."""
+    return CONTROL_BYTES_PER_POD * int(n_pods) + CONTROL_SLACK_BYTES
+
+
+def classify_collectives(records: List[Dict], specs,
+                         *, control_bytes: Optional[int] = None,
+                         n_pods: int = 2) -> Dict[str, Any]:
+    """Match a lowered round's cross-pod collective operands against the
+    expected wire specs (:func:`repro.dist.wire.wire_operand_specs`).
+
+    ``records`` are ``HloCost.collective_ops`` entries already filtered to
+    pod-crossing groups (:func:`repro.analysis.hlo_parse
+    .cross_pod_collectives`).  Every operand of every record must be
+    either (a) one expected payload array — each spec may match **exactly
+    once**, so a payload that crosses twice or a model-sized fp32 that
+    crosses at all shows up as ``unexpected`` — or (b) scalar control
+    traffic, bounded per operand by ``control_bytes`` (default
+    :func:`control_traffic_allowance`).
+
+    Returns ``{"payload_bytes", "control_bytes", "unmatched_specs",
+    "unexpected"}``; a clean round has empty lists and
+    ``payload_bytes == sum(spec bytes)``.
+    """
+    if control_bytes is None:
+        control_bytes = control_traffic_allowance(n_pods)
+    remaining = list(specs)
+    payload_b, control_b = 0, 0
+    unexpected = []
+    for r in records:
+        operands = r.get("operands") or []
+        for o in operands:
+            key = (o["dtype"], tuple(o["dims"]), int(o["bytes"]))
+            if key in remaining:
+                remaining.remove(key)
+                payload_b += key[2]
+            elif int(o["bytes"]) <= control_bytes:
+                control_b += int(o["bytes"])
+            else:
+                unexpected.append({"kind": r["kind"], "name": r["name"],
+                                   "operand": o})
+    return {"payload_bytes": int(payload_b),
+            "control_bytes": int(control_b),
+            "unmatched_specs": remaining,
+            "unexpected": unexpected}
+
+
+@register_rule
+class CollectivePlacement(Rule):
+    """Every cross-pod collective operand is a registered wire spec or
+    control traffic; optionally the payload total must equal the bill.
+
+    ``specs`` is the ``wire_operand_specs`` list this executable is
+    licensed to ship; ``expect_none=True`` asserts the executable crosses
+    the pod axis with NOTHING (closed rounds, commit halves, pod-local
+    train/serve steps).  After ``check`` runs, ``self.classification``
+    holds the classification dict (the audits' JSON reports read it).
+    """
+
+    name = "collective-placement"
+
+    def __init__(self, specs: Sequence = (), *, n_devices: int,
+                 n_pods: int, billed_bytes: Optional[int] = None,
+                 expect_none: bool = False,
+                 control_bytes: Optional[int] = None):
+        self.specs = list(specs)
+        self.n_devices = int(n_devices)
+        self.n_pods = int(n_pods)
+        self.billed_bytes = billed_bytes
+        self.expect_none = expect_none
+        self.control_bytes = (control_traffic_allowance(n_pods)
+                              if control_bytes is None else int(control_bytes))
+        self.classification: Optional[Dict[str, Any]] = None
+        self.records: List[Dict] = []
+
+    def check(self, target: Target) -> List[Violation]:
+        recs = cross_pod_collectives(target.cost, self.n_devices,
+                                     self.n_pods)
+        self.records = recs
+        out: List[Violation] = []
+        if self.expect_none:
+            self.classification = {"payload_bytes": 0, "control_bytes": 0,
+                                   "unmatched_specs": [], "unexpected": []}
+            for r in recs:
+                out.append(self.violation(
+                    "unexpected-cross-pod-collective",
+                    f"{r['kind']} {r['name']!r} crosses the pod axis in an "
+                    f"executable that must stay pod-local "
+                    f"({r['operand_bytes']} B)", record=r))
+            return out
+        cls = classify_collectives(recs, self.specs,
+                                   control_bytes=self.control_bytes,
+                                   n_pods=self.n_pods)
+        self.classification = cls
+        for u in cls["unexpected"]:
+            o = u["operand"]
+            vcls = ("fp32-model-crossing" if o["dtype"] in ("f32", "f64")
+                    else "unexpected-cross-pod-operand")
+            out.append(self.violation(
+                vcls,
+                f"{u['kind']} {u['name']!r} ships {o['dtype']}"
+                f"{o['dims']} ({o['bytes']} B) across the pod axis, "
+                f"matching no registered wire spec (allowance "
+                f"{self.control_bytes} B)", **u))
+        for s in cls["unmatched_specs"]:
+            out.append(self.violation(
+                "missing-wire-operand",
+                f"billed wire array {s[0]}{list(s[1])} ({s[2]} B) never "
+                f"crossed the pod axis (merged into something else?)",
+                spec=list(s)))
+        if (self.billed_bytes is not None and not out
+                and cls["payload_bytes"] != int(self.billed_bytes)):
+            out.append(self.violation(
+                "billing-drift",
+                f"cross-pod gather ships {cls['payload_bytes']} B/pod but "
+                f"the registry bills {self.billed_bytes} B/pod",
+                shipped=cls["payload_bytes"], billed=int(self.billed_bytes)))
+        return out

@@ -1,0 +1,166 @@
+"""Rule registry + the single ``analyze(lowered, rules=...)`` driver.
+
+The analyzer's contract (DESIGN.md §9): every jitted entry point — the
+Hermes round, the async dispatch/commit halves, the post-resize rounds,
+the train step — is checked *statically*, from its lowered/compiled HLO
+text and (for the jaxpr/AST rules) the python callable itself, before it
+ever runs.  A rule inspects one :class:`Target` and returns
+:class:`Violation` records with a **named violation class**; ``analyze``
+raises :class:`AnalysisError` (an ``AssertionError`` subclass, so existing
+audit callers and pytest treat it like the inline asserts it replaced)
+listing every violation.
+
+Adding a rule::
+
+    @register_rule
+    class MyRule(Rule):
+        name = "my-rule"
+        def check(self, target: Target) -> List[Violation]:
+            ...
+
+Rules are *instances* (constructed with their expectations — wire specs,
+donated parameter numbers, …) so the driver stays generic::
+
+    analyze(compiled_or_hlo_text, rules=[CollectivePlacement(specs, ...)],
+            label="hermes_round[int4]")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+from repro.analysis.hlo_parse import HloCost, parse_hlo_cost
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class Violation:
+    """One broken invariant: ``rule`` is the rule name, ``cls`` the named
+    violation class (e.g. ``fp32-model-crossing``, ``dropped-donation``),
+    ``detail`` whatever structured evidence the rule collected."""
+    rule: str
+    cls: str
+    message: str
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}/{self.cls}] {self.message}"
+
+
+class AnalysisError(AssertionError):
+    """Raised by :func:`analyze` when any rule reports violations."""
+
+    def __init__(self, label: str, violations: Sequence[Violation]):
+        self.label = label
+        self.violations = list(violations)
+        lines = [f"analysis failed for {label}: "
+                 f"{len(self.violations)} violation(s)"]
+        lines += [f"  {v}" for v in self.violations]
+        super().__init__("\n".join(lines))
+
+
+@dataclasses.dataclass
+class Target:
+    """What a rule sees: compiled HLO text (``hlo``), and/or the python
+    callable + abstract example args (``fn``/``example_args``) for the
+    jaxpr- and AST-level rules.  ``cost`` parses the HLO lazily, once."""
+    hlo: Optional[str] = None
+    fn: Optional[Callable] = None
+    example_args: Tuple = ()
+    label: str = "<target>"
+    _cost: Optional[HloCost] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def cost(self) -> HloCost:
+        if self._cost is None:
+            if self.hlo is None:
+                raise ValueError(f"{self.label}: rule needs HLO text but "
+                                 f"the target carries none")
+            self._cost = parse_hlo_cost(self.hlo)
+        return self._cost
+
+
+class Rule:
+    """Base class: subclasses set ``name`` and implement ``check``."""
+
+    name = "rule"
+
+    def check(self, target: Target) -> List[Violation]:
+        raise NotImplementedError
+
+    def violation(self, cls: str, message: str, **detail) -> Violation:
+        return Violation(rule=self.name, cls=cls, message=message,
+                         detail=detail)
+
+
+RULE_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register_rule(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator: adds the rule class to the registry by ``name``."""
+    if cls.name in RULE_REGISTRY and RULE_REGISTRY[cls.name] is not cls:
+        raise ValueError(f"analysis rule {cls.name!r} already registered")
+    RULE_REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_rules() -> Tuple[str, ...]:
+    return tuple(RULE_REGISTRY)
+
+
+@dataclasses.dataclass
+class Report:
+    label: str
+    violations: List[Violation]
+    rules: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def raise_if_failed(self) -> "Report":
+        if self.violations:
+            raise AnalysisError(self.label, self.violations)
+        return self
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"label": self.label, "ok": self.ok, "rules": self.rules,
+                "violations": [dataclasses.asdict(v)
+                               for v in self.violations]}
+
+
+def _as_hlo_text(lowered: Any) -> Optional[str]:
+    """Accept HLO text, a jax ``Lowered`` (compiles it), or a ``Compiled``."""
+    if lowered is None or isinstance(lowered, str):
+        return lowered
+    if hasattr(lowered, "compile"):        # jax.stages.Lowered
+        lowered = lowered.compile()
+    if hasattr(lowered, "as_text"):        # jax.stages.Compiled
+        return lowered.as_text()
+    raise TypeError(f"analyze: cannot extract HLO from {type(lowered)!r}")
+
+
+def analyze(lowered: Any, rules: Sequence[Rule], *,
+            fn: Optional[Callable] = None, example_args: Tuple = (),
+            label: Optional[str] = None, fail: bool = True) -> Report:
+    """Run ``rules`` over one executable; the single analyzer driver.
+
+    ``lowered`` is compiled HLO text, a ``jax.stages.Lowered`` (compiled
+    here), a ``jax.stages.Compiled``, or ``None`` for pure jaxpr/AST rules;
+    ``fn``/``example_args`` feed the rules that trace or read source.  With
+    ``fail=True`` (default) any violation raises :class:`AnalysisError`
+    naming every violation class — the analyzer fails loudly; ``fail=False``
+    returns the :class:`Report` for callers that aggregate.
+    """
+    target = Target(hlo=_as_hlo_text(lowered), fn=fn,
+                    example_args=tuple(example_args),
+                    label=label or getattr(fn, "__name__", "<target>"))
+    violations: List[Violation] = []
+    for rule in rules:
+        violations.extend(rule.check(target))
+    report = Report(label=target.label, violations=violations,
+                    rules=[r.name for r in rules])
+    if fail:
+        report.raise_if_failed()
+    return report

@@ -1,0 +1,83 @@
+"""Donation/aliasing rule: donated buffers must actually alias.
+
+``jax.jit(..., donate_argnums=...)`` is a *request*: XLA silently drops a
+donation whenever shapes/dtypes/layouts stop lining up (or a refactor
+drops the argnum), and the only trace is a missing entry in the compiled
+module's ``input_output_alias`` header.  A dropped donation on the async
+``pending`` buffer or the train state doubles peak memory at exactly the
+LM scales the roadmap targets — so the rule reads the header and asserts
+every expected donated parameter appears as an alias source.
+
+Named violation class: ``dropped-donation``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.core import Rule, Target, Violation, register_rule
+from repro.analysis.hlo_parse import parse_input_output_aliases
+
+
+def donated_param_numbers(example_args: Sequence[Any],
+                          donate_argnums: Iterable[int]
+                          ) -> Dict[int, Tuple[int, int]]:
+    """Flat HLO parameter-number range per donated positional arg.
+
+    jit flattens its positional args depth-first into HLO entry
+    parameters; argnum ``k`` covers the half-open flat range
+    ``[sum(leaves(args[:k])), +leaves(args[k]))``.  Only valid when every
+    argument is used (``keep_unused=False`` prunes dead params and shifts
+    the numbering — the entry points this rule guards use all args).
+    """
+    counts = [len(jax.tree.leaves(a)) for a in example_args]
+    starts = [0]
+    for c in counts:
+        starts.append(starts[-1] + c)
+    return {int(k): (starts[int(k)], starts[int(k)] + counts[int(k)])
+            for k in donate_argnums}
+
+
+@register_rule
+class DonationAliasing(Rule):
+    """Every flat parameter number in ``donated`` must appear as an alias
+    source in the compiled module's ``input_output_alias`` header.
+
+    ``donated`` maps a human label to a range/iterable of flat parameter
+    numbers (build it with :func:`donated_param_numbers`); ``min_aliased``
+    optionally relaxes full coverage to a count (XLA may legitimately skip
+    aliasing zero-sized leaves).  ``self.aliases`` holds the parsed header
+    entries after ``check``.
+    """
+
+    name = "donation-aliasing"
+
+    def __init__(self, donated: Dict[str, Iterable[int]], *,
+                 min_aliased: Optional[Dict[str, int]] = None):
+        self.donated = {k: tuple(v) for k, v in donated.items()}
+        self.min_aliased = dict(min_aliased or {})
+        self.aliases: List[Dict] = []
+
+    def check(self, target: Target) -> List[Violation]:
+        self.aliases = parse_input_output_aliases(target.hlo or "")
+        aliased = {a["param_number"] for a in self.aliases}
+        out: List[Violation] = []
+        for label, params in self.donated.items():
+            missing = [p for p in params if p not in aliased]
+            need = len(params) - self.min_aliased.get(label, 0)
+            if self.min_aliased.get(label) is not None:
+                ok = (len(params) - len(missing)
+                      >= self.min_aliased[label])
+            else:
+                ok = not missing
+            if not ok:
+                out.append(self.violation(
+                    "dropped-donation",
+                    f"donated buffer {label!r}: parameters {missing} have "
+                    f"no input_output_alias entry — XLA dropped the "
+                    f"donation ({len(params) - len(missing)}/{len(params)} "
+                    f"aliased, need >= {max(need, 0)})",
+                    label=label, missing=missing,
+                    aliased=sorted(aliased)))
+        return out

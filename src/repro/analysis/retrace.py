@@ -1,0 +1,241 @@
+"""Retrace/host-sync guard: keep the round loop free of per-round stalls.
+
+Two bug classes, both regressions this repo has actually shipped:
+
+* **host-sync-in-loop** — a device->host round trip (``bool()``/``int()``/
+  ``float()`` on a device value, ``.item()``, ``np.asarray``,
+  ``jax.device_get``) inside a ``for``/``while`` round loop.  The PR 4
+  instance was ``bool(any_push)`` once per round: it blocked the host on
+  the round's whole dependency chain and emptied the dispatch queue.  The
+  loop's ONE sanctioned choke point is the ``allow``-listed fetcher
+  (``_host_fetch`` in ``launch.train``); values produced by it are host
+  values and may be freely cast.
+* **weak-type-arg** — a jitted entry point traced with a python scalar (or
+  any weak-typed abstract value).  Weak types split the jit cache: the
+  same call site alternating ``1.0`` and ``jnp.float32(1.0)`` retraces and
+  recompiles, which on a round loop means a compile *per round*.
+
+The source scan is AST-only (no execution, no import side effects); the
+argument scan inspects the abstract example args the executable was
+lowered with.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+from typing import Any, List, Optional, Sequence, Set, Tuple
+
+import jax
+
+from repro.analysis.core import Rule, Target, Violation, register_rule
+
+# host-sync call surface: casts that force a device sync on a traced/device
+# value, methods that block, and fetchers that copy device->host
+HOST_CASTS = ("bool", "int", "float", "complex")
+HOST_ATTRS = ("item", "tolist", "block_until_ready")
+HOST_FETCH_ATTRS = ("device_get",)
+NUMPY_NAMES = ("np", "numpy")
+
+
+def _call_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _call_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return None
+
+
+def _is_allowed(name: Optional[str], allow: Sequence[str]) -> bool:
+    if name is None:
+        return False
+    return name in allow or name.split(".")[-1] in allow
+
+
+def _host_safe(node: ast.AST, host: Set[str], allow: Sequence[str]) -> bool:
+    """Is this expression derived from host values (safe to cast)?"""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in host
+    if isinstance(node, ast.Attribute):
+        return _host_safe(node.value, host, allow)
+    if isinstance(node, ast.Subscript):
+        return _host_safe(node.value, host, allow)
+    if isinstance(node, ast.Call):
+        return _is_allowed(_call_name(node.func), allow)
+    if isinstance(node, ast.BinOp):
+        return (_host_safe(node.left, host, allow)
+                and _host_safe(node.right, host, allow))
+    if isinstance(node, ast.UnaryOp):
+        return _host_safe(node.operand, host, allow)
+    return False
+
+
+class _LoopScan:
+    """Sequential scan of one function body: tracks which names were
+    assigned from an allow-listed fetcher, flags host syncs inside loops."""
+
+    def __init__(self, rule: "RetraceGuard", fn_name: str):
+        self.rule = rule
+        self.fn_name = fn_name
+        self.violations: List[Violation] = []
+
+    # -- assignment tracking ------------------------------------------------
+    def _targets(self, t: ast.AST) -> List[str]:
+        if isinstance(t, ast.Name):
+            return [t.id]
+        if isinstance(t, (ast.Tuple, ast.List)):
+            out = []
+            for e in t.elts:
+                out.extend(self._targets(e))
+            return out
+        if isinstance(t, ast.Starred):
+            return self._targets(t.value)
+        return []
+
+    def _track(self, stmt: ast.stmt, host: Set[str]) -> None:
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            if _is_allowed(_call_name(stmt.value.func), self.rule.allow):
+                for t in stmt.targets:
+                    host.update(self._targets(t))
+
+    # -- call flagging ------------------------------------------------------
+    def _flag(self, call: ast.Call, host: Set[str]) -> None:
+        allow = self.rule.allow
+        name = _call_name(call.func)
+        if _is_allowed(name, allow):
+            return
+        where = f"{self.fn_name}:{call.lineno}"
+        if isinstance(call.func, ast.Name) and call.func.id in HOST_CASTS:
+            if not all(_host_safe(a, host, allow) for a in call.args):
+                self.violations.append(self.rule.violation(
+                    "host-sync-in-loop",
+                    f"{where}: {call.func.id}(...) on a device value inside "
+                    f"the round loop forces a per-round host sync (the "
+                    f"bool(any_push) bug class); route it through the "
+                    f"allow-listed fetcher {list(allow)} or keep it on "
+                    f"device", line=call.lineno, call=call.func.id))
+        elif isinstance(call.func, ast.Attribute):
+            attr = call.func.attr
+            if attr in HOST_ATTRS and not _host_safe(call.func.value, host,
+                                                     allow):
+                self.violations.append(self.rule.violation(
+                    "host-sync-in-loop",
+                    f"{where}: .{attr}() inside the round loop blocks the "
+                    f"host on the device dependency chain",
+                    line=call.lineno, call=attr))
+            elif attr in HOST_FETCH_ATTRS:
+                self.violations.append(self.rule.violation(
+                    "host-sync-in-loop",
+                    f"{where}: {name}(...) inside the round loop is an "
+                    f"un-allow-listed device->host fetch",
+                    line=call.lineno, call=name))
+            elif (attr in ("asarray", "array")
+                  and _call_name(call.func.value) in NUMPY_NAMES
+                  and not all(_host_safe(a, host, allow)
+                              for a in call.args)):
+                self.violations.append(self.rule.violation(
+                    "host-sync-in-loop",
+                    f"{where}: {name}(...) materializes a device value on "
+                    f"host every round", line=call.lineno, call=name))
+
+    def _flag_calls_in(self, node: ast.AST, host: Set[str]) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self._flag(sub, host)
+
+    # -- statement walk -----------------------------------------------------
+    def scan(self, stmts: Sequence[ast.stmt], in_loop: bool,
+             host: Set[str]) -> None:
+        for stmt in stmts:
+            self._track(stmt, host)
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                header = stmt.iter if hasattr(stmt, "iter") else stmt.test
+                if in_loop:
+                    self._flag_calls_in(header, host)
+                self.scan(stmt.body, True, host)
+                self.scan(stmt.orelse, True, host)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs execute when *called*; scanned with a fresh
+                # scope and loop state of their own
+                self.scan(stmt.body, False, set())
+            elif isinstance(stmt, ast.If):
+                if in_loop:
+                    self._flag_calls_in(stmt.test, host)
+                self.scan(stmt.body, in_loop, host)
+                self.scan(stmt.orelse, in_loop, host)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                if in_loop:
+                    for item in stmt.items:
+                        self._flag_calls_in(item.context_expr, host)
+                self.scan(stmt.body, in_loop, host)
+            elif isinstance(stmt, ast.Try):
+                self.scan(stmt.body, in_loop, host)
+                for h in stmt.handlers:
+                    self.scan(h.body, in_loop, host)
+                self.scan(stmt.orelse, in_loop, host)
+                self.scan(stmt.finalbody, in_loop, host)
+            else:
+                if in_loop:
+                    self._flag_calls_in(stmt, host)
+
+
+@register_rule
+class RetraceGuard(Rule):
+    """AST + abstract-arg pass for round-loop hot-path regressions.
+
+    ``allow`` names the sanctioned device->host fetchers; values assigned
+    from them count as host values for the cast checks.  ``scan_source``
+    runs the loop scan over ``target.fn``; ``check_args`` scans
+    ``target.example_args`` for weak-typed leaves.
+    """
+
+    name = "retrace-guard"
+
+    def __init__(self, *, allow: Sequence[str] = ("_host_fetch",),
+                 scan_source: bool = True, check_args: bool = True):
+        self.allow = tuple(allow)
+        self.scan_source = scan_source
+        self.check_args = check_args
+
+    # -- weak-type / jit-cache churn ---------------------------------------
+    def _weak_args(self, args: Tuple[Any, ...]) -> List[Violation]:
+        out: List[Violation] = []
+        for i, arg in enumerate(args):
+            flat, _ = jax.tree_util.tree_flatten_with_path(arg)
+            for path, leaf in flat:
+                where = f"arg {i}" + "".join(str(p) for p in path)
+                weak = (isinstance(leaf, (bool, int, float, complex))
+                        or bool(getattr(leaf, "weak_type", False)))
+                if weak:
+                    out.append(self.violation(
+                        "weak-type-arg",
+                        f"{where} is weak-typed "
+                        f"({type(leaf).__name__}): alternating it with a "
+                        f"committed-dtype array splits the jit cache and "
+                        f"retraces per call — pass e.g. jnp.float32(...) "
+                        f"instead", arg=i, path=str(path)))
+        return out
+
+    def _scan_fn(self, fn: Any) -> List[Violation]:
+        fn = inspect.unwrap(fn)
+        try:
+            src = textwrap.dedent(inspect.getsource(fn))
+            tree = ast.parse(src)
+        except (OSError, TypeError, SyntaxError):
+            return []   # no retrievable source (lambda/compiled): skip
+        scan = _LoopScan(self, getattr(fn, "__name__", "<fn>"))
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scan.scan(node.body, False, set())
+        return scan.violations
+
+    def check(self, target: Target) -> List[Violation]:
+        out: List[Violation] = []
+        if self.scan_source and target.fn is not None:
+            out.extend(self._scan_fn(target.fn))
+        if self.check_args and target.example_args:
+            out.extend(self._weak_args(target.example_args))
+        return out

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import jax
 
 from repro.core.cluster import ModelBundle
 from repro.data.synthetic import make_image_dataset, train_test_split

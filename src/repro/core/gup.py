@@ -23,7 +23,6 @@ from collections import deque
 from typing import Deque, Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.config import HermesConfig

@@ -16,12 +16,12 @@ by the Level-B device integration and by the fused Pallas kernel
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.utils.trees import tree_axpy, tree_scale, tree_zeros_like
+from repro.utils.trees import tree_zeros_like
 
 Tree = Any
 

@@ -28,8 +28,13 @@ import jax.numpy as jnp
 from repro.config import HermesConfig
 from repro.core.allocator import Allocation, reallocate, should_readmit
 from repro.core.cluster import (
-    CommModel, EdgeWorker, Meter, ModelBundle, WorkerSpec, default_cluster,
-    _make_step, _make_eval,
+    CommModel,
+    EdgeWorker,
+    Meter,
+    ModelBundle,
+    default_cluster,
+    _make_step,
+    _make_eval,
 )
 from repro.core.gup import gup_init, gup_update
 from repro.core.loss_sgd import ps_init, ps_push

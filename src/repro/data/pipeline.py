@@ -6,7 +6,6 @@ batch in flight (the TPU-native analogue of Hermes' PS->worker prefetching).
 """
 from __future__ import annotations
 
-import collections
 import threading
 import queue as _queue
 from typing import Dict, Iterator, Optional

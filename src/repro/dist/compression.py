@@ -16,11 +16,12 @@ hook); this module provides the pytree-level operations on top of it:
   (Karimireddy et al., 2019).
 * :func:`payload_bytes` — the single per-leaf billing function the
   simulator and benchmarks use.
-* :func:`resolve_kernel_dispatch` — kernel-vs-jnp dispatch policy
-  (re-exported from :mod:`repro.dist.wire`, where the formats themselves
-  consult it for the int4 nibble pack), overridable via
-  ``HermesConfig.kernel_dispatch`` or the ``REPRO_WIRE_KERNEL`` env var so
-  CPU CI can exercise the Pallas kernel path in interpret mode.
+
+Kernel-vs-jnp dispatch policy lives in
+:func:`repro.dist.wire.resolve_kernel_dispatch` (one source of truth —
+import it from there), overridable via ``HermesConfig.kernel_dispatch``
+or the ``REPRO_WIRE_KERNEL`` env var so CPU CI can exercise the Pallas
+kernel path in interpret mode.
 
 Blocked formats are shard-local (blocks tile the last axis only; leading
 axes — including the pod axis of a stacked delta — are untouched), so the
@@ -37,14 +38,15 @@ import jax.numpy as jnp
 
 from repro.dist.wire import (  # noqa: F401  (re-exported API)
     BLOCK, WireFormat, available_formats, gather_payloads, get_format,
-    pin_gathered, register, resolve_kernel_dispatch,
+    pin_gathered, register,
 )
+from repro.dist.wire import resolve_kernel_dispatch as _resolve_dispatch
 
 Tree = Any
 
 
 def _use_kernel() -> bool:
-    return resolve_kernel_dispatch()
+    return _resolve_dispatch()
 
 
 # ---------------------------------------------------------------------------

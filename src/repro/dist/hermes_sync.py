@@ -40,9 +40,8 @@ from repro.config import HermesConfig
 from repro.core.gup import gup_gate_jax, gup_state_jax
 from repro.dist.compression import (
     decode_tree, encode_tree, gather_payloads, get_format, pin_gathered,
-    resolve_kernel_dispatch,
 )
-from repro.dist.wire import payload_buffer_spec
+from repro.dist.wire import payload_buffer_spec, resolve_kernel_dispatch
 
 Tree = Any
 
@@ -366,7 +365,7 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
 
     ``use_kernel=None`` resolves the kernel-vs-jnp dispatch from
     ``cfg.kernel_dispatch`` and the ``REPRO_WIRE_KERNEL`` env var
-    (``dist.compression.resolve_kernel_dispatch``).
+    (``dist.wire.resolve_kernel_dispatch``).
 
     ``mesh``/``pod_axis`` turn on the explicit payload-gather ship inside
     the merge (see :func:`hermes_merge`): the open branch's only

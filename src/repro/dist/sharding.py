@@ -17,7 +17,7 @@ replication — which is always sharding-correct, merely less sharded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec

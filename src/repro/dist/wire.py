@@ -644,40 +644,14 @@ def classify_round_collectives(records: List[Dict], specs,
     """Match a lowered round's cross-pod collective operands against the
     expected wire specs (:func:`wire_operand_specs`).
 
-    ``records`` are ``HloCost.collective_ops`` entries already filtered to
-    pod-crossing groups (``roofline.hlo_parse.cross_pod_collectives``).
-    Every operand of every record must be either (a) one expected payload
-    array — each spec may match **exactly once**, so a payload that
-    crosses twice or a model-sized fp32 that crosses at all shows up as
-    ``unexpected`` — or (b) scalar control traffic (the merge's
-    ``w2``/``denom``/``any_push`` bookkeeping), bounded by
-    ``control_bytes`` per operand (default ``4 * n_pods + 8``).
-
-    Returns ``{"payload_bytes", "control_bytes", "unmatched_specs",
-    "unexpected"}``; a clean round has empty lists and
-    ``payload_bytes == sum(spec bytes)``.
+    Compatibility alias: the classification (and the control-traffic
+    allowance constant) moved to :mod:`repro.analysis.collectives`, where
+    the ``collective-placement`` rule reuses it.  Imported lazily so the
+    wire registry keeps zero analyzer dependencies at import time.
     """
-    if control_bytes is None:
-        control_bytes = 4 * int(n_pods) + 8
-    remaining = list(specs)
-    payload_b, control_b = 0, 0
-    unexpected = []
-    for r in records:
-        operands = r.get("operands") or []
-        for o in operands:
-            key = (o["dtype"], tuple(o["dims"]), int(o["bytes"]))
-            if key in remaining:
-                remaining.remove(key)
-                payload_b += key[2]
-            elif int(o["bytes"]) <= control_bytes:
-                control_b += int(o["bytes"])
-            else:
-                unexpected.append({"kind": r["kind"], "name": r["name"],
-                                   "operand": o})
-    return {"payload_bytes": int(payload_b),
-            "control_bytes": int(control_b),
-            "unmatched_specs": remaining,
-            "unexpected": unexpected}
+    from repro.analysis.collectives import classify_collectives
+    return classify_collectives(records, specs,
+                                control_bytes=control_bytes, n_pods=n_pods)
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,6 @@ only on partial (diagonal / window-edge) blocks.
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax

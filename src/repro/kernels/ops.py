@@ -8,7 +8,6 @@ body with the same blocking/masking logic.  Model code calls these through
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,3 +98,34 @@ def pack_int4(q, *, axis=-1):
 def unpack_int4(p, *, axis=-1):
     """Inverse of :func:`pack_int4` (exact, sign included)."""
     return _pk.unpack_int4(p, axis=axis, interpret=_interpret())
+
+
+def wire_lint_cases():
+    """``(label, fn, example_args)`` for every wire-path kernel.
+
+    The static analyzer (``repro.analysis.PallasTileLint``) traces each
+    case with ``jax.make_jaxpr`` — nothing executes — and lints the
+    ``pallas_call`` BlockSpecs and kernel-body dtypes it finds.  Shapes
+    are the smallest that exercise the real blocking: two 256-element
+    blocks per row, two pods for the merge kernels.
+    """
+    f32, i8 = jnp.float32, jnp.int8
+    sds = jax.ShapeDtypeStruct
+    pods = 2
+    g = sds((4, 512), f32)           # 2 blocks of 256 per row
+    q = sds((pods, 4, 512), i8)
+    qp = sds((pods, 4, 256), i8)     # nibble-packed: HALF bytes per block
+    sc = sds((pods, 4, 2), f32)      # one scale per 256-block
+    w2 = sds((pods,), f32)
+    scalar = sds((), f32)
+    flag = sds((), jnp.bool_)
+    return [
+        ("quantize_int8", quantize_int8, (sds((4, 512), f32),)),
+        ("pack_int4", pack_int4, (sds((4, 512), i8),)),
+        ("unpack_int4", unpack_int4, (sds((4, 256), i8),)),
+        ("loss_weighted_update", loss_weighted_update,
+         (g, sds((pods, 4, 512), f32), scalar, w2, scalar, flag)),
+        ("dequant_merge", dequant_merge, (g, q, sc, w2, scalar, flag)),
+        ("dequant_merge_packed", dequant_merge_packed,
+         (g, qp, sc, w2, scalar, flag)),
+    ]

@@ -8,7 +8,6 @@ reduction (absmax) and the scaled round run entirely on the VPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -5,7 +5,7 @@ with no blocking — slow but unambiguous.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

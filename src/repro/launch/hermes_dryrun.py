@@ -44,9 +44,11 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 # Partitionable threefry makes the encode placement-invariant.
 jax.config.update("jax_threefry_partitionable", True)
 
+from repro.analysis import CollectivePlacement, analyze
 from repro.config import HermesConfig
 from repro.configs import get_config
 from repro.dist.compression import encode_tree, payload_bytes
+from repro.dist.wire import wire_operand_specs
 from repro.dist.hermes_sync import hermes_pod_state, hermes_round
 from repro.launch.mesh import (
     arch_parallel_config, arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
@@ -139,17 +141,22 @@ def _byte_audit(mesh, abstract_params, formats):
 
         with mesh:
             jitted = jax.jit(ship_fn, in_shardings=(pod_sh, rep))
-            cost = parse_hlo_cost(
-                jitted.lower(pod_params, params32).compile().as_text())
-        ag_bytes = int(cost.collective_bytes_by_kind.get("all-gather", 0))
+            hlo = jitted.lower(pod_params, params32).compile().as_text()
+        cost = parse_hlo_cost(hlo)
+        specs = wire_operand_specs(params32, name, n_pods)
         billed = payload_bytes(params32, name)  # per pod == per device here
-        assert ag_bytes == billed, (
-            f"{name}: lowered cross-pod collective ships {ag_bytes} B/pod "
-            f"but the registry bills {billed} B/pod — wire/billing drift")
+        # The shared collective-placement rule: every pod-crossing operand
+        # must be a billed wire array (fp32 hoists are the named
+        # ``fp32-model-crossing`` class) and the matched bytes must equal
+        # the bill exactly (``billing-drift``).
+        rule = CollectivePlacement(specs, n_devices=int(mesh.devices.size),
+                                   n_pods=n_pods, billed_bytes=billed)
+        analyze(hlo, rules=[rule], label=f"byte_audit[{name}]")
+        cls = rule.classification
         out[name] = {
             "billed_bytes_per_pod": billed,
-            "allgather_bytes_per_pod": ag_bytes,
-            "bytes_per_element": round(ag_bytes / n_elts, 6),
+            "allgather_bytes_per_pod": cls["payload_bytes"],
+            "bytes_per_element": round(cls["payload_bytes"] / n_elts, 6),
             "collectives": cost.collective_counts,
         }
     if "int4" in out and "int8" in out:
@@ -184,11 +191,6 @@ def _round_byte_audit(mesh, hcfg, abstract_params, formats):
     (per-pod ``w2``, ``denom``, ``any_push``), bounded per operand at a
     few bytes and reported, not billed.
     """
-    from repro.dist.wire import (
-        classify_round_collectives, wire_operand_specs,
-    )
-    from repro.roofline.hlo_parse import cross_pod_collectives
-
     n_pods = mesh.devices.shape[0]
     n_dev = int(mesh.devices.size)
     params32 = jax.tree.map(
@@ -222,33 +224,25 @@ def _round_byte_audit(mesh, hcfg, abstract_params, formats):
 
         with mesh:
             shardings = (pod_sh, gup_sh, rep, rep_tree)
-            cost = parse_hlo_cost(
-                jax.jit(open_fn, in_shardings=shardings)
-                .lower(pod_params, gup_sds, losses, params32)
-                .compile().as_text())
-            ccost = parse_hlo_cost(
-                jax.jit(closed_fn, in_shardings=shardings)
-                .lower(pod_params, gup_sds, losses, params32)
-                .compile().as_text())
+            hlo = (jax.jit(open_fn, in_shardings=shardings)
+                   .lower(pod_params, gup_sds, losses, params32)
+                   .compile().as_text())
+            closed_hlo = (jax.jit(closed_fn, in_shardings=shardings)
+                          .lower(pod_params, gup_sds, losses, params32)
+                          .compile().as_text())
 
-        recs = cross_pod_collectives(cost, n_dev, n_pods)
+        cost = parse_hlo_cost(hlo)
         specs = wire_operand_specs(params32, name, n_pods)
-        cls = classify_round_collectives(recs, specs, n_pods=n_pods)
         billed = payload_bytes(params32, name)
-        assert not cls["unexpected"], (
-            f"{name}: non-wire model-sized operands cross the pod axis: "
-            f"{cls['unexpected'][:3]}")
-        assert not cls["unmatched_specs"], (
-            f"{name}: billed wire arrays never crossed the pod axis "
-            f"(merged into something else?): {cls['unmatched_specs'][:3]}")
-        assert cls["payload_bytes"] == billed, (
-            f"{name}: round-level cross-pod gather ships "
-            f"{cls['payload_bytes']} B/pod but the registry bills "
-            f"{billed} B/pod")
-        closed_cross = cross_pod_collectives(ccost, n_dev, n_pods)
-        assert not closed_cross, (
-            f"{name}: closed round must lower with zero cross-pod "
-            f"collectives, got {[r['kind'] for r in closed_cross]}")
+        rule = CollectivePlacement(specs, n_devices=n_dev, n_pods=n_pods,
+                                   billed_bytes=billed)
+        analyze(hlo, rules=[rule], label=f"round_byte_audit[{name}]")
+        cls, recs = rule.classification, rule.records
+        rule_c = CollectivePlacement(n_devices=n_dev, n_pods=n_pods,
+                                     expect_none=True)
+        analyze(closed_hlo, rules=[rule_c],
+                label=f"round_byte_audit_closed[{name}]")
+        closed_cross = rule_c.records
         out[name] = {
             "billed_bytes_per_pod": billed,
             "round_gather_bytes_per_pod": cls["payload_bytes"],

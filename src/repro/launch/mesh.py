@@ -17,7 +17,7 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
-from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.config import ModelConfig, ParallelConfig
 from repro.dist.sharding import AxisRules, make_rules
 
 

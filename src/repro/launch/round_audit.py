@@ -58,11 +58,10 @@ from repro.dist.hermes_sync import (
     hermes_commit, hermes_dispatch, hermes_pod_state, hermes_round,
 )
 from repro.dist.wire import (
-    available_formats, classify_round_collectives, payload_buffer_spec,
-    wire_operand_specs,
+    available_formats, payload_buffer_spec, wire_operand_specs,
 )
+from repro.analysis import CollectivePlacement, analyze
 from repro.launch.mesh import make_pod_mesh
-from repro.roofline.hlo_parse import cross_pod_collectives, parse_hlo_cost
 
 N_PODS = 2
 
@@ -161,25 +160,29 @@ def lowering_pin(mode: str, mesh) -> Dict[str, Any]:
 
     with mesh:
         shardings = (pod_sh, gup_sh, rep, rep_tree)
-        cost = parse_hlo_cost(
-            jax.jit(open_fn, in_shardings=shardings)
-            .lower(sds(pods), sds(gup), losses, sds(wg))
-            .compile().as_text())
-        ccost = parse_hlo_cost(
-            jax.jit(closed_fn, in_shardings=shardings)
-            .lower(sds(pods), sds(gup), losses, sds(wg))
-            .compile().as_text())
+        open_hlo = (jax.jit(open_fn, in_shardings=shardings)
+                    .lower(sds(pods), sds(gup), losses, sds(wg))
+                    .compile().as_text())
+        closed_hlo = (jax.jit(closed_fn, in_shardings=shardings)
+                      .lower(sds(pods), sds(gup), losses, sds(wg))
+                      .compile().as_text())
 
-    recs = cross_pod_collectives(cost, n_dev, N_PODS)
+    # the collective-placement rule carries the old inline asserts: every
+    # crossing operand is a billed wire spec (exactly once) or control
+    # traffic, the totals match the bill, and the closed round crosses
+    # nothing — violations raise AnalysisError (an AssertionError)
     specs = wire_operand_specs(wg, mode, N_PODS)
-    cls = classify_round_collectives(recs, specs, n_pods=N_PODS)
     billed = payload_bytes(wg, mode)
+    rule = CollectivePlacement(specs, n_devices=n_dev, n_pods=N_PODS,
+                               billed_bytes=billed)
+    analyze(open_hlo, rules=[rule], label=f"lowering_pin[{mode}]")
+    cls, recs = rule.classification, rule.records
+    rule_c = CollectivePlacement(n_devices=n_dev, n_pods=N_PODS,
+                                 expect_none=True)
+    analyze(closed_hlo, rules=[rule_c],
+            label=f"lowering_pin_closed[{mode}]")
+    closed_cross = rule_c.records
     n_elts = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(wg))
-    assert not cls["unexpected"], (mode, cls["unexpected"])
-    assert not cls["unmatched_specs"], (mode, cls["unmatched_specs"])
-    assert cls["payload_bytes"] == billed, (mode, cls, billed)
-    closed_cross = cross_pod_collectives(ccost, n_dev, N_PODS)
-    assert not closed_cross, (mode, [r["kind"] for r in closed_cross])
     return {
         "billed_bytes_per_pod": int(billed),
         "round_gather_bytes_per_pod": int(cls["payload_bytes"]),
@@ -249,31 +252,36 @@ def async_pin(mode: str, mesh) -> Dict[str, Any]:
 
     with mesh:
         d_sh = (pod_sh, gup_sh, rep, rep_tree)
-        dcost = parse_hlo_cost(
-            jax.jit(dispatch_fn, in_shardings=d_sh)
-            .lower(sds(pods), sds(gup), losses, sds(wg))
-            .compile().as_text())
-        dccost = parse_hlo_cost(
-            jax.jit(dispatch_closed, in_shardings=d_sh)
-            .lower(sds(pods), sds(gup), losses, sds(wg))
-            .compile().as_text())
-        ccost = parse_hlo_cost(
-            jax.jit(commit_fn, in_shardings=(pod_sh, pend_sh, rep_tree))
-            .lower(sds(pods), pending_struct, sds(wg))
-            .compile().as_text())
+        dispatch_hlo = (jax.jit(dispatch_fn, in_shardings=d_sh)
+                        .lower(sds(pods), sds(gup), losses, sds(wg))
+                        .compile().as_text())
+        dclosed_hlo = (jax.jit(dispatch_closed, in_shardings=d_sh)
+                       .lower(sds(pods), sds(gup), losses, sds(wg))
+                       .compile().as_text())
+        commit_hlo = (jax.jit(commit_fn,
+                              in_shardings=(pod_sh, pend_sh, rep_tree))
+                      .lower(sds(pods), pending_struct, sds(wg))
+                      .compile().as_text())
 
-    recs = cross_pod_collectives(dcost, n_dev, N_PODS)
+    # analyzer rules replace the old inline asserts: the dispatch ships
+    # exactly the billed wire, the closed dispatch and the commit cross
+    # the pod axis with nothing
     specs = wire_operand_specs(wg, mode, N_PODS)
-    cls = classify_round_collectives(recs, specs, n_pods=N_PODS)
     billed = payload_bytes(wg, mode)
+    rule = CollectivePlacement(specs, n_devices=n_dev, n_pods=N_PODS,
+                               billed_bytes=billed)
+    analyze(dispatch_hlo, rules=[rule], label=f"async_pin_dispatch[{mode}]")
+    cls, recs = rule.classification, rule.records
+    rule_dc = CollectivePlacement(n_devices=n_dev, n_pods=N_PODS,
+                                  expect_none=True)
+    analyze(dclosed_hlo, rules=[rule_dc],
+            label=f"async_pin_dispatch_closed[{mode}]")
+    closed_cross = rule_dc.records
+    rule_cm = CollectivePlacement(n_devices=n_dev, n_pods=N_PODS,
+                                  expect_none=True)
+    analyze(commit_hlo, rules=[rule_cm], label=f"async_pin_commit[{mode}]")
+    commit_cross = rule_cm.records
     n_elts = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(wg))
-    assert not cls["unexpected"], (mode, cls["unexpected"])
-    assert not cls["unmatched_specs"], (mode, cls["unmatched_specs"])
-    assert cls["payload_bytes"] == billed, (mode, cls, billed)
-    closed_cross = cross_pod_collectives(dccost, n_dev, N_PODS)
-    assert not closed_cross, (mode, [r["kind"] for r in closed_cross])
-    commit_cross = cross_pod_collectives(ccost, n_dev, N_PODS)
-    assert not commit_cross, (mode, [r["kind"] for r in commit_cross])
     return {
         "dispatch_gather_bytes_per_pod": int(cls["payload_bytes"]),
         "round_bytes_per_element": round(cls["payload_bytes"] / n_elts, 6),

@@ -12,7 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+from jax.sharding import NamedSharding
 
 from repro.config import (
     ModelConfig, OptimizerConfig, ParallelConfig, ShapeConfig,

@@ -22,8 +22,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
+from functools import partial
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -31,11 +31,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import (
-    ModelConfig, HermesConfig, OptimizerConfig, FAMILY_DENSE, replace,
+    ModelConfig,
+    HermesConfig,
+    OptimizerConfig,
+    FAMILY_DENSE,
 )
 from repro.configs import get_smoke_config
 from repro.checkpoint import Checkpointer
-from repro.core.gup import gup_state_jax
 from repro.data.synthetic import make_lm_dataset
 from repro.dist.hermes_sync import (
     hermes_commit, hermes_dispatch, hermes_pod_state, hermes_round,
@@ -52,6 +54,32 @@ PRESETS: Dict[str, ModelConfig] = {}
 # at log intervals or after the loop — never per round, so the dispatch
 # queue stays full (tests/test_perf_opts.py counts these calls).
 _host_fetch = jax.device_get
+
+
+def make_async_round_jits(hcfg: HermesConfig, mesh=None):
+    """The async round's two jitted halves: ``(dispatch_jit, commit_jit)``.
+
+    Separate executables are the overlap mechanism (DESIGN.md §8): the
+    gather's outputs feed only ``commit_jit``, so the runtime's async
+    dispatch runs the collective while the pod step executes.  The
+    stacked ``pod_params`` and the pending buffer are donated into the
+    commit (``donate_argnums=(0, 1)``) — both are consumed exactly once.
+    The pod params alias the merged outputs in place (the model-sized
+    win, pinned by the donation-aliasing rule); the pending wire arrays
+    have no shape-matching output to alias but are freed the moment the
+    late merge reads them.  Module-level so the donation contract is one
+    definition shared by ``train_hermes``, the static analyzer
+    (``launch/analyze.py``), and the pinned donation test.
+    """
+    commit_jit = jax.jit(
+        lambda pod_params, pending, w_global: hermes_commit(
+            pod_params, pending, w_global, cfg=hcfg, mesh=mesh),
+        donate_argnums=(0, 1))
+    dispatch_jit = jax.jit(
+        lambda pod_params, gup, pod_losses, w_global, L, error, rng:
+        hermes_dispatch(pod_params, gup, pod_losses, w_global, L,
+                        hcfg, error=error, rng=rng, mesh=mesh))
+    return dispatch_jit, commit_jit
 
 
 def _preset(name: str) -> ModelConfig:
@@ -103,7 +131,10 @@ def train_single(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     batches = make_batches(tokens, batch, seq, rng,
                            skip=min(start_step, steps))
 
-    @jax.jit
+    # the old state is dead the moment the step returns the new one, so
+    # donate it: peak memory stays one state + transients, and the
+    # donation-aliasing rule (repro.analysis) can pin the alias header
+    @partial(jax.jit, donate_argnums=(0,))
     def step_fn(state, batch):
         loss, grads = jax.value_and_grad(
             lambda p: lm_loss(p, batch, cfg))(state["params"])
@@ -153,8 +184,9 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     immediately returns to local steps.  Dispatch, commit, and the pod
     step are separate jitted programs and the pending payload is only
     read by the commit, so the runtime overlaps the gather with the next
-    ``lam`` pod steps.  The pending buffer is donated into the commit
-    (it is consumed exactly once), and a final drain commit flushes the
+    ``lam`` pod steps.  The stacked pod params and the pending buffer
+    are donated into the commit (``make_async_round_jits``; both are
+    consumed exactly once), and a final drain commit flushes the
     last in-flight payload after the loop so every dispatched round
     merges exactly once.
     """
@@ -179,7 +211,9 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     gup = hermes_pod_state(hcfg, pods)
     error = None
 
-    @jax.jit
+    # donate the stacked params/opt state: the previous round's buffers
+    # are consumed in place, halving the peak for the largest arrays
+    @partial(jax.jit, donate_argnums=(0, 1))
     def pod_step(pod_params, pod_opt, batches):
         def one(params, opt, batch):
             loss, grads = jax.value_and_grad(
@@ -207,19 +241,7 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
 
     async_rounds = bool(getattr(hcfg, "async_rounds", False))
     if async_rounds:
-        # Separate executables are the overlap mechanism: the gather's
-        # outputs feed only commit_jit, so the runtime's async dispatch
-        # runs the collective while pod_step executes.  The pending
-        # buffer is donated — consumed exactly once — so the in-flight
-        # wire arrays are freed the moment the late merge reads them.
-        commit_jit = jax.jit(
-            lambda pod_params, pending, w_global: hermes_commit(
-                pod_params, pending, w_global, cfg=hcfg, mesh=mesh),
-            donate_argnums=(1,))
-        dispatch_jit = jax.jit(
-            lambda pod_params, gup, pod_losses, w_global, L, error, rng:
-            hermes_dispatch(pod_params, gup, pod_losses, w_global, L,
-                            hcfg, error=error, rng=rng, mesh=mesh))
+        dispatch_jit, commit_jit = make_async_round_jits(hcfg, mesh)
 
     def _commit_pending(pod_params, w_global, L_global, pending, counters):
         merges_dev, committed_dev = counters

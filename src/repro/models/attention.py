@@ -19,9 +19,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.dist.sharding import AxisRules, constrain
-from repro.models.layers import (
-    P, dense_init, ones_init, apply_rope, rms_norm_vec,
-)
+from repro.models.layers import dense_init, ones_init, apply_rope, rms_norm_vec
 
 NEG_INF = -1e30
 

@@ -10,7 +10,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import P, dense_init, zeros_init, split_tree
+from repro.models.layers import dense_init, zeros_init, split_tree
 
 
 def _conv_init(key, kh, kw, cin, cout):

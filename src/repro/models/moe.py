@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.dist.sharding import AxisRules, constrain
-from repro.models.layers import P, dense_init
+from repro.models.layers import dense_init
 
 
 def init_moe(cfg: ModelConfig, key) -> Dict[str, Any]:

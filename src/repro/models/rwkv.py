@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.dist.sharding import AxisRules, constrain
-from repro.models.layers import P, dense_init, zeros_init, ones_init
+from repro.models.layers import dense_init, zeros_init, ones_init
 
 MIX_NAMES = ("w", "k", "v", "r", "g")
 DECAY_LORA = 64

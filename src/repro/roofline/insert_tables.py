@@ -1,6 +1,4 @@
 """Splice the baseline + optimized roofline tables into EXPERIMENTS.md."""
-import re
-import sys
 
 from repro.roofline.report import collect, to_markdown
 

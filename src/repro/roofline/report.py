@@ -9,13 +9,12 @@ markdown table and a JSON artifact (results/roofline.json) for §Perf diffs.
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.roofline.analysis import HW_V5E, analyze_cell
+from repro.configs import ASSIGNED_ARCHS
+from repro.roofline.analysis import analyze_cell
 from repro.launch.dryrun import applicable_shapes
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]

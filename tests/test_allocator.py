@@ -1,5 +1,4 @@
 """Dual binary search + IQR outlier detection (paper §IV-A)."""
-import numpy as np
 import pytest
 
 from repro.config import HermesConfig

@@ -1,6 +1,5 @@
 """Data pipeline + optimizers."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

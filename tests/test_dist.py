@@ -7,12 +7,11 @@ from jax.sharding import PartitionSpec as PS
 
 from repro.config import HermesConfig, ParallelConfig
 from repro.configs import get_config
-from repro.dist.sharding import AxisRules, make_rules
-from repro.dist.compression import (
-    compress_tree, payload_bytes, resolve_kernel_dispatch,
-)
+from repro.dist.sharding import AxisRules
+from repro.dist.compression import compress_tree, payload_bytes
 from repro.dist.wire import (
     BLOCK, WireFormat, available_formats, block_axis, get_format, register,
+    resolve_kernel_dispatch,
 )
 from repro.launch.mesh import arch_rules
 from repro.roofline.hlo_parse import parse_hlo_cost, shape_bytes

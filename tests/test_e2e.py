@@ -1,6 +1,4 @@
 """End-to-end drivers: single trainer, Hermes Level-B trainer, server."""
-import jax.numpy as jnp
-import pytest
 
 from repro.config import HermesConfig, OptimizerConfig
 from repro.launch.train import _preset, train_single, train_hermes

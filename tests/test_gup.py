@@ -4,9 +4,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.config import HermesConfig
-from repro.core.gup import (
-    GUPState, gup_init, gup_update, gup_state_jax, gup_gate_jax, zscore,
-)
+from repro.core.gup import gup_init, gup_update, gup_state_jax, gup_gate_jax
 
 
 def test_no_push_without_history():

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.config import HermesConfig
-from repro.core.loss_sgd import apply_global, loss_weighted_merge
 from repro.dist.hermes_sync import (
     hermes_merge, hermes_pod_state, hermes_round,
 )

@@ -2,10 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.loss_sgd import (
-    PSState, ps_init, ps_push, loss_weighted_merge, apply_global,
+    ps_init,
+    ps_push,
+    loss_weighted_merge,
+    apply_global,
 )
 
 

@@ -18,13 +18,11 @@ Three proof layers over the packed payload-gather merge (DESIGN.md §3/§4):
   key instead of returning the stale shape-only bill.
 """
 import json
-import math
 import os
 import subprocess
 import sys
 from pathlib import Path
 
-import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp

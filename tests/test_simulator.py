@@ -1,7 +1,6 @@
 """Level-A cluster simulation: Hermes beats BSP; metrics sane (paper §V)."""
 import pytest
 
-from repro.config import HermesConfig
 from repro.core.allocator import Allocation
 from repro.core.bundles import make_paper_bundle
 from repro.core.simulator import run_framework

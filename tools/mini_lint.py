@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""No-dependency fallback for ``make lint`` when ruff is not installed.
+
+Implements the two pyflakes checks that actually catch bugs in this repo's
+history — F401 (imported but unused) and F811 (redefinition of an imported
+name by a later import) — with the stdlib ``ast`` only, so the lint gate
+works in the hermetic container.  ``make lint`` prefers ``ruff check``
+(config in ``ruff.toml``) whenever the binary exists; this script is the
+floor, not the ceiling.
+
+Suppression: any line containing ``# noqa`` is exempt, matching ruff's
+blanket-noqa behaviour.  ``__init__.py`` re-exports are exempt from F401
+when the name appears in ``__all__`` or the module defines ``__all__`` at
+all (the conventional "public surface" file).
+
+Exit status 1 if any finding, 0 otherwise.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOTS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def _bindings(node):
+    """(name, lineno) pairs bound by one import statement."""
+    if isinstance(node, ast.Import):
+        return [((a.asname or a.name.split(".")[0]), node.lineno)
+                for a in node.names]
+    if isinstance(node, ast.ImportFrom) and node.module != "__future__":
+        return [((a.asname or a.name), node.lineno)
+                for a in node.names if a.name != "*"]
+    return []
+
+
+def _imported_names(tree):
+    """Yield (name, lineno) for every import binding anywhere."""
+    for node in ast.walk(tree):
+        yield from _bindings(node)
+
+
+def _iter_scopes(tree):
+    """Direct statement lists, one per scope — duplicates across scopes
+    (the same helper imported in two different test functions) are fine;
+    duplicates WITHIN one are F811."""
+    yield tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            yield node.body
+
+
+def _used_names(tree):
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # covered by the root ast.Name, nothing extra needed
+            pass
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    for elt in ast.walk(node.value):
+                        if isinstance(elt, ast.Constant) and isinstance(
+                                elt.value, str):
+                            used.add(elt.value)
+    return used
+
+
+def lint_file(path: Path):
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:  # a syntax error IS a finding
+        return [(path, e.lineno or 0, f"E999 syntax error: {e.msg}")]
+    noqa = {i for i, line in enumerate(src.splitlines(), 1)
+            if "# noqa" in line}
+    has_all = any(isinstance(t, ast.Name) and t.id == "__all__"
+                  for node in tree.body if isinstance(node, ast.Assign)
+                  for t in node.targets)
+    exempt_reexport = path.name == "__init__.py" and has_all
+    used = _used_names(tree)
+    findings = []
+    for name, lineno in _imported_names(tree):
+        if lineno in noqa:
+            continue
+        if name not in used and not exempt_reexport and name != "_":
+            findings.append((path, lineno,
+                             f"F401 {name!r} imported but unused"))
+    for body in _iter_scopes(tree):
+        seen = {}
+        for stmt in body:
+            for name, lineno in _bindings(stmt):
+                if lineno in noqa:
+                    continue
+                if name in seen and seen[name] != lineno:
+                    findings.append(
+                        (path, lineno,
+                         f"F811 redefinition of imported {name!r} "
+                         f"(first at line {seen[name]})"))
+                seen.setdefault(name, lineno)
+    return findings
+
+
+def main() -> int:
+    repo = Path(__file__).resolve().parent.parent
+    findings = []
+    for root in ROOTS:
+        base = repo / root
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            findings.extend(lint_file(path))
+    for path, lineno, msg in findings:
+        print(f"{path.relative_to(repo)}:{lineno}: {msg}")
+    n_files = sum(1 for root in ROOTS if (repo / root).is_dir()
+                  for _ in (repo / root).rglob("*.py"))
+    print(f"mini_lint: {len(findings)} finding(s) across {n_files} files")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
