@@ -2,12 +2,13 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test collect kernel-smoke quickstart bench-smoke elastic-smoke \
-	async-smoke lint lint-hlo
+	async-smoke cluster-smoke lint lint-hlo
 
 # tier-1 verify (ROADMAP.md); the lint gates, the collect gate, the
-# sub-byte wire kernel smoke, and the pipelined-round smoke run first so
-# import/invariant/layout/billing/overlap drift fails before the suite
-test: lint lint-hlo collect kernel-smoke async-smoke
+# sub-byte wire kernel smoke, the pipelined-round smoke, and the two-tier
+# cluster smoke run first so import/invariant/layout/billing/overlap/
+# topology drift fails before the suite
+test: lint lint-hlo collect kernel-smoke async-smoke cluster-smoke
 	python -m pytest -x -q
 
 # Source lint: ruff (ruff.toml) when installed; otherwise the no-deps
@@ -94,3 +95,15 @@ elastic-smoke:
 	    --out results/dryrun_opt/hermes_elastic_smoke.json
 	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --rejoin-pod \
 	    --out results/dryrun_opt/hermes_rejoin_smoke.json
+
+# Two-tier topology gate (DESIGN.md §10): lower the cluster round on a
+# (2, 2, 2, 1) mesh and assert, per wire format, that the only
+# model-sized operands crossing the slow cluster axis are exactly the
+# n_clusters re-encoded packed partials (slow-tier bytes scale with
+# clusters, not pods; closed rounds cross nothing on either tier), run
+# the executed n_clusters=1 bit-identity pin against hermes_round, and
+# prove the per-cluster shrink (survivors' compress step collective-free,
+# 3 resize cycles bit-identical to the never-resized oracle).
+cluster-smoke:
+	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --byte-audit \
+	    --clusters 2 --out results/dryrun_opt/hermes_cluster_smoke.json

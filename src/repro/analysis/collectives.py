@@ -107,7 +107,10 @@ class CollectivePlacement(Rule):
     def __init__(self, specs: Sequence = (), *, n_devices: int,
                  n_pods: int, billed_bytes: Optional[int] = None,
                  expect_none: bool = False,
-                 control_bytes: Optional[int] = None):
+                 control_bytes: Optional[int] = None,
+                 n_clusters: Optional[int] = None,
+                 cluster_specs: Sequence = (),
+                 cluster_billed_bytes: Optional[int] = None):
         self.specs = list(specs)
         self.n_devices = int(n_devices)
         self.n_pods = int(n_pods)
@@ -115,8 +118,50 @@ class CollectivePlacement(Rule):
         self.expect_none = expect_none
         self.control_bytes = (control_traffic_allowance(n_pods)
                               if control_bytes is None else int(control_bytes))
+        #: Two-tier mode (DESIGN.md §10): with ``n_clusters`` set, the
+        #: pod-crossing records are split into cluster-crossing (replica
+        #: groups spanning more than one cluster-sized device block) and
+        #: intra-cluster; ``specs`` licenses the intra-cluster tier and
+        #: ``cluster_specs`` (``cluster_wire_operand_specs`` — exactly
+        #: n_clusters payload rows) licenses the slow tier.
+        self.n_clusters = None if n_clusters is None else int(n_clusters)
+        self.cluster_specs = list(cluster_specs)
+        self.cluster_billed_bytes = cluster_billed_bytes
         self.classification: Optional[Dict[str, Any]] = None
+        self.cluster_classification: Optional[Dict[str, Any]] = None
         self.records: List[Dict] = []
+        self.cluster_records: List[Dict] = []
+
+    def _classify_tier(self, recs: List[Dict], specs: List,
+                       billed: Optional[int], tier: str,
+                       out: List[Violation]) -> Dict[str, Any]:
+        cls = classify_collectives(recs, specs,
+                                   control_bytes=self.control_bytes,
+                                   n_pods=self.n_pods)
+        for u in cls["unexpected"]:
+            o = u["operand"]
+            vcls = ("fp32-model-crossing" if o["dtype"] in ("f32", "f64")
+                    else "unexpected-cross-pod-operand")
+            out.append(self.violation(
+                vcls,
+                f"{u['kind']} {u['name']!r} ships {o['dtype']}"
+                f"{o['dims']} ({o['bytes']} B) across the {tier} axis, "
+                f"matching no registered wire spec (allowance "
+                f"{self.control_bytes} B)", tier=tier, **u))
+        for s in cls["unmatched_specs"]:
+            out.append(self.violation(
+                "missing-wire-operand",
+                f"billed wire array {s[0]}{list(s[1])} ({s[2]} B) never "
+                f"crossed the {tier} axis (merged into something else?)",
+                tier=tier, spec=list(s)))
+        if (billed is not None and not out
+                and cls["payload_bytes"] != int(billed)):
+            out.append(self.violation(
+                "billing-drift",
+                f"cross-{tier} gather ships {cls['payload_bytes']} B/pod "
+                f"but the registry bills {int(billed)} B/pod",
+                tier=tier, shipped=cls["payload_bytes"], billed=int(billed)))
+        return cls
 
     def check(self, target: Target) -> List[Violation]:
         recs = cross_pod_collectives(target.cost, self.n_devices,
@@ -126,6 +171,7 @@ class CollectivePlacement(Rule):
         if self.expect_none:
             self.classification = {"payload_bytes": 0, "control_bytes": 0,
                                    "unmatched_specs": [], "unexpected": []}
+            self.cluster_classification = dict(self.classification)
             for r in recs:
                 out.append(self.violation(
                     "unexpected-cross-pod-collective",
@@ -133,31 +179,23 @@ class CollectivePlacement(Rule):
                     f"executable that must stay pod-local "
                     f"({r['operand_bytes']} B)", record=r))
             return out
-        cls = classify_collectives(recs, self.specs,
-                                   control_bytes=self.control_bytes,
-                                   n_pods=self.n_pods)
-        self.classification = cls
-        for u in cls["unexpected"]:
-            o = u["operand"]
-            vcls = ("fp32-model-crossing" if o["dtype"] in ("f32", "f64")
-                    else "unexpected-cross-pod-operand")
-            out.append(self.violation(
-                vcls,
-                f"{u['kind']} {u['name']!r} ships {o['dtype']}"
-                f"{o['dims']} ({o['bytes']} B) across the pod axis, "
-                f"matching no registered wire spec (allowance "
-                f"{self.control_bytes} B)", **u))
-        for s in cls["unmatched_specs"]:
-            out.append(self.violation(
-                "missing-wire-operand",
-                f"billed wire array {s[0]}{list(s[1])} ({s[2]} B) never "
-                f"crossed the pod axis (merged into something else?)",
-                spec=list(s)))
-        if (self.billed_bytes is not None and not out
-                and cls["payload_bytes"] != int(self.billed_bytes)):
-            out.append(self.violation(
-                "billing-drift",
-                f"cross-pod gather ships {cls['payload_bytes']} B/pod but "
-                f"the registry bills {self.billed_bytes} B/pod",
-                shipped=cls["payload_bytes"], billed=int(self.billed_bytes)))
+        if self.n_clusters is not None:
+            # Tier split: a record whose replica groups still cross
+            # cluster-sized device blocks is slow-tier; the rest of the
+            # pod-crossing set is the fast intra-cluster tier.  The
+            # records are the same dicts by identity, so id() partitions
+            # them exactly.
+            crecs = cross_pod_collectives(target.cost, self.n_devices,
+                                          self.n_clusters)
+            cids = {id(r) for r in crecs}
+            irecs = [r for r in recs if id(r) not in cids]
+            self.cluster_records = crecs
+            self.classification = self._classify_tier(
+                irecs, self.specs, self.billed_bytes, "pod", out)
+            self.cluster_classification = self._classify_tier(
+                crecs, self.cluster_specs, self.cluster_billed_bytes,
+                "cluster", out)
+            return out
+        self.classification = self._classify_tier(
+            recs, self.specs, self.billed_bytes, "pod", out)
         return out

@@ -292,6 +292,13 @@ class HermesConfig:
     # ``core.allocator.should_readmit`` admits only when the Eq.-3 speedup
     # from one more member over the expected remaining rounds exceeds it.
     rejoin_cost_rounds: float = 2.0
+    # hierarchical topology (DESIGN.md §10): pods are grouped into
+    # ``n_clusters`` latency clusters (k-means over the allocator's
+    # observed iteration+transfer times).  The gated loss-weighted merge
+    # runs intra-cluster over the fast "pod" axis; only each cluster's
+    # merged, re-encoded delta crosses the slow "cluster" axis.
+    # ``n_clusters=1`` lowers bit-identically to the flat ``hermes_round``.
+    n_clusters: int = 1
 
     def validate(self) -> None:
         # lazy import: repro.dist imports this module at load time
@@ -305,6 +312,7 @@ class HermesConfig:
         assert self.failure_timeout_factor > 0.0, self.failure_timeout_factor
         assert self.min_live_pods >= 1, self.min_live_pods
         assert self.rejoin_cost_rounds >= 0.0, self.rejoin_cost_rounds
+        assert self.n_clusters >= 1, self.n_clusters
 
 
 @dataclass(frozen=True)

@@ -181,3 +181,75 @@ def reallocate(times: Dict[str, float], allocs: Dict[str, Allocation],
             k, target, epochs=epochs, dss_domain=dss_domain,
             mbs_choices=cfg.mbs_choices, mem_limit_dss=lim)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Latency clustering (DESIGN.md §10, the hierarchical topology)
+# ---------------------------------------------------------------------------
+
+def kmeans_1d(times: Dict[str, float], n_clusters: int, *,
+              iters: int = 32) -> Dict[str, int]:
+    """Deterministic 1-D k-means over observed per-worker times.
+
+    This is the cluster-assignment policy of the two-tier Hermes round:
+    workers with similar observed iteration+transfer times (the
+    allocator's ``latest_times`` signal) merge on fast intra-cluster
+    links, and only one aggregated delta per cluster crosses the slow
+    tier.  Everything here is deterministic so re-clustering at the
+    allocator's sweep cadence is reproducible:
+
+    * workers are sorted by ``(time, name)`` — the name tiebreak pins
+      tied times to a stable order;
+    * centroids initialize at evenly spaced quantiles of the sorted
+      values (no RNG) and refine by Lloyd iterations;
+    * a point equidistant to two centroids joins the lower-indexed one;
+    * cluster ids are re-labeled by ascending centroid before returning,
+      so cluster 0 is always the fastest tier;
+    * with fewer workers than clusters, each worker gets a singleton
+      cluster (rank order), and the surplus ids go unused.
+
+    Returns ``{worker_name: cluster_id}`` with ids in
+    ``[0, n_clusters)``.  Dropping one worker's entry and re-running
+    moves no other worker across a boundary unless the centroids
+    themselves move past it — the stability property the tests pin.
+    """
+    assert n_clusters >= 1, n_clusters
+    if not times:
+        return {}
+    items = sorted(times.items(), key=lambda kv: (kv[1], kv[0]))
+    names = [k for k, _ in items]
+    vals = np.asarray([v for _, v in items], np.float64)
+    n = len(vals)
+    if n_clusters == 1:
+        return {k: 0 for k in names}
+    if n <= n_clusters:
+        return {k: i for i, k in enumerate(names)}
+    # quantile-spread init over the sorted values (deterministic)
+    q = (np.arange(n_clusters) + 0.5) / n_clusters
+    cent = np.quantile(vals, q)
+    assign = np.zeros((n,), np.int64)
+    for it in range(max(1, iters)):
+        # nearest centroid; exact ties -> lower cluster index (argmin)
+        d = np.abs(vals[:, None] - cent[None, :])
+        new_assign = np.argmin(d, axis=1)
+        if it > 0 and np.array_equal(new_assign, assign):
+            break
+        assign = new_assign
+        for c in range(n_clusters):
+            sel = vals[assign == c]
+            if sel.size:
+                cent[c] = float(np.mean(sel))
+    # re-label by ascending centroid; empty clusters sort last by their
+    # (stale) centroid but receive no members, so ids stay in range
+    order = np.argsort(cent, kind="stable")
+    relabel = np.empty_like(order)
+    relabel[order] = np.arange(n_clusters)
+    return {k: int(relabel[assign[i]]) for i, k in enumerate(names)}
+
+
+def cluster_sizes(assignment: Dict[str, int], n_clusters: int) -> list:
+    """Member count per cluster id, length ``n_clusters``."""
+    out = [0] * n_clusters
+    for c in assignment.values():
+        out[c] += 1
+    return out

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import HermesConfig
-from repro.core.allocator import Allocation, reallocate, should_readmit
+from repro.core.allocator import (Allocation, kmeans_1d, reallocate,
+                                  should_readmit)
 from repro.core.cluster import (
     CommModel,
     EdgeWorker,
@@ -575,6 +576,24 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
     merge_ready: Dict[int, float] = {}
     async_rounds = bool(getattr(hcfg, "async_rounds", False))
     comm_stall = 0.0
+    # Two-tier topology (DESIGN.md §10): with n_clusters > 1 a push pays
+    # the fast intra-cluster hop at full wire bytes, but the slow
+    # cluster-crossing hop ships at most ONE payload per cluster at a
+    # time — a push landing while its cluster's aggregator is still
+    # shipping piggybacks on the in-flight merged payload (no new slow
+    # bytes, arrival clamped to the aggregator's landing).  That is the
+    # Level-A shadow of hermes_cluster_merge: slow-tier model-sized
+    # bytes scale with n_clusters, not n_pods.  Assignment is k-means
+    # over the allocator's observed iteration times, refreshed at the
+    # sweep cadence; until the first sweep everyone sits in cluster 0.
+    # With n_clusters == 1 none of this runs and billing is bit-for-bit
+    # the flat path.
+    n_clusters = max(1, int(getattr(hcfg, "n_clusters", 1) or 1))
+    clustered = n_clusters > 1
+    fast_comm = CommModel(latency=env.comm.latency * 0.25,
+                          bandwidth=env.comm.bandwidth * 4.0)
+    cluster_of: Dict[str, int] = {}
+    cluster_busy: Dict[int, float] = {}
     n_train = env.n_train
     w_global = env.params0
     comp_err: Dict[int, Tree] = {}   # per-worker error-feedback residual
@@ -698,7 +717,22 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
                 comp_pushes += 1
             env.meter.call(w.spec.name, "push", env.push_wire_bytes, n=1,
                            t=sim_t)
-            arrive = sim_t + env.comm.time(env.push_wire_bytes)
+            if clustered:
+                # fast hop always ships the worker's own payload; the
+                # slow hop is billed only when this push has to open a
+                # new cluster-crossing transfer (the aggregator idle)
+                c = cluster_of.get(w.spec.name, 0)
+                fast_arrive = sim_t + fast_comm.time(env.push_wire_bytes)
+                busy = cluster_busy.get(c, 0.0)
+                if busy > fast_arrive:
+                    arrive = busy
+                else:
+                    arrive = fast_arrive + env.comm.time(env.push_wire_bytes)
+                    cluster_busy[c] = arrive
+                    env.meter.call(w.spec.name, "push_cluster",
+                                   env.push_wire_bytes, n=1, t=sim_t)
+            else:
+                arrive = sim_t + env.comm.time(env.push_wire_bytes)
             start = max(arrive, ps_busy_until)
             ps, w_global, _m = ps_push(ps, G, ps_eval)
             ps_time = 0.004 * _m["evals"] * max(1.0, eval_n / 64)
@@ -733,6 +767,12 @@ def _run_hermes(env: _Env, stop: _StopCfg, hcfg: HermesConfig, *,
             for x in env.workers:
                 if env.dead(x, sim_t):
                     latest_times.pop(x.spec.name, None)
+            if clustered and latest_times:
+                # re-cluster on the same observation set the allocator
+                # sweeps; a dead worker's entry was just dropped, so its
+                # cluster re-forms around the survivors (satellite: the
+                # assignment is deterministic and stable under drops)
+                cluster_of = kmeans_1d(latest_times, n_clusters)
             if len(latest_times) < 2:
                 # audit-trail event only (n=0): not a PS API contact
                 env.meter.call("allocator", "alloc_skip", 0.0, n=0, t=sim_t)

@@ -31,7 +31,9 @@ pinned against.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +43,10 @@ from repro.core.gup import gup_gate_jax, gup_state_jax
 from repro.dist.compression import (
     decode_tree, encode_tree, gather_payloads, get_format, pin_gathered,
 )
-from repro.dist.wire import payload_buffer_spec, resolve_kernel_dispatch
+from repro.dist.wire import (
+    gather_payloads_tiered, payload_buffer_spec, pin_tier,
+    resolve_kernel_dispatch,
+)
 
 Tree = Any
 
@@ -659,6 +664,598 @@ def hermes_commit(pod_params: Tree, pending: Dict[str, Any], w_global: Tree,
             recv = decode_tree(payload, rep_t, cfg.compression)
             new_global = _merge_recv(wg, recv, w1, w2, denom,
                                      any_push, use_kernel)
+        new_pods = jax.tree.map(
+            lambda p, g: jnp.where(_pod_mask(gates, p), g[None], p),
+            pods, new_global)
+        return new_pods, new_global
+
+    def _closed(args):
+        return args
+
+    new_pods, new_global = jax.lax.cond(
+        any_push, _open, _closed, (pod_params, w_global))
+    return {
+        "pod_params": new_pods,
+        "w_global": new_global,
+        "gates": gates,
+        "any_push": any_push,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Two-tier rounds: intra-cluster merge, cluster-crossing ship (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The flat round's one collective gathers every pod's payload globally, so
+# the slow tier carries ``n_pods`` model-sized arrays per open round.  The
+# two-tier round splits the merge along the algebraic identity
+#
+#     merged = (w1*g + sum_i w2_i*(g + r_i)) / denom
+#            =  g + (sum_c R_c) / denom,      R_c = sum_{i in c} w2_i * r_i
+#
+# (exact because denom = w1 + sum_i w2_i): each cluster reduces its own
+# members' weighted decoded deltas to ONE model-shaped partial R_c on fast
+# intra-cluster links (``gather_payloads_tiered`` keeps the payload rows
+# cluster-sharded), re-encodes the stacked partials, and only that
+# ``(n_clusters,)``-row payload crosses the slow cluster axis — slow-tier
+# model-sized bytes scale with ``n_clusters``, not ``n_pods``.
+#
+# Two deliberate deviations from the flat round, both pinned by tests:
+#
+# * ``n_clusters=1`` does not run this path at all — every entry point
+#   DELEGATES verbatim to its flat twin, so the parity oracle is
+#   bit-identity by construction (the ISSUE 9 acceptance gate).
+# * The cluster-tier re-encode carries NO error feedback: the requantize
+#   noise of a lossy wire is zero-mean for the stochastic formats and one
+#   extra quantization deep for the rest, and threading a per-cluster
+#   residual through elastic resizes would couple every cluster's state.
+#   Pod-tier error feedback is untouched (it updates at the sender's
+#   encode, exactly as in ``hermes_merge``).
+#
+# The per-cluster partials are jnp-only (``lax.fori_loop`` accumulation,
+# same bit-identity argument as ``_merge_leaf_jnp``); the fused/Pallas
+# kernels keep serving the flat path that ``n_clusters=1`` lowers to.
+
+
+def resolve_n_clusters(cfg: HermesConfig, n_clusters: Optional[int] = None,
+                       cluster_sizes: Optional[Sequence[int]] = None) -> int:
+    """Effective cluster count: explicit sizes > explicit count > config."""
+    if cluster_sizes is not None:
+        return len(cluster_sizes)
+    if n_clusters is not None:
+        return int(n_clusters)
+    return int(getattr(cfg, "n_clusters", 1) or 1)
+
+
+def _cluster_index(n_pods: int, n_clusters: int,
+                   cluster_sizes: Optional[Sequence[int]] = None
+                   ) -> np.ndarray:
+    """Static pod-row -> cluster-id map, cluster-major (matching the
+    ``launch.mesh.make_pod_mesh`` device layout)."""
+    if cluster_sizes is None:
+        assert n_pods % n_clusters == 0, (n_pods, n_clusters)
+        return np.repeat(np.arange(n_clusters), n_pods // n_clusters)
+    sizes = [int(s) for s in cluster_sizes]
+    assert sum(sizes) == n_pods, (sizes, n_pods)
+    assert all(s >= 1 for s in sizes), sizes
+    return np.repeat(np.arange(len(sizes)), sizes)
+
+
+def _cluster_partials(w_global: Tree, payloads: Tree, delta: Tree, fmt,
+                      w2: jnp.ndarray, n_pods: int, n_clusters: int,
+                      cluster_sizes: Optional[Sequence[int]] = None) -> Tree:
+    """Per-cluster weighted partial sums ``R_c = sum_{i in c} w2_i * r_i``
+    over gathered payload rows, stacked on a leading ``(n_clusters,)``.
+
+    The balanced path reshapes each payload row axis ``(n_pods,) ->
+    (C, ppc)`` and runs one ``lax.fori_loop`` over the within-cluster
+    index, decoding all clusters' i-th members at once (a batched decode
+    is valid because the blocked wire layout tiles a trailing axis for
+    every sliceable leaf, independent of the leading row count).  After
+    the tiered gather the row axis is cluster-sharded, so the reshape,
+    the axis-1 indexing, and the accumulate are all cluster-local — no
+    decoded fp32 ever crosses a cluster boundary.
+
+    A leaf whose payload is not row-stacked (blocked axis == the pod
+    stacking itself, e.g. stacked scalars) decodes whole and is reduced
+    from the reconstruction — same fallback as ``_merge_sliced``.
+
+    ``cluster_sizes`` (uneven clusters, the degraded post-shrink state —
+    unplaced only) runs the SAME loop body over a zero-weight-padded
+    ``(C, max_size)`` member grid: a padding slot replays row 0's payload
+    at weight exactly ``0.0``, contributing a ``±0.0`` term — bit-for-bit
+    what a live-masked member contributes on the balanced grid, which is
+    how the resize-cycle oracle stays exact (the structurally different
+    per-cluster loop this replaced cost a ulp of parity to differing
+    fusion).  Accumulation in fp32, like every merge path here.
+    """
+    C = int(n_clusters)
+    g_leaves, treedef = jax.tree.flatten(w_global)
+    p_leaves = treedef.flatten_up_to(payloads)
+    d_leaves = treedef.flatten_up_to(delta)
+    out = []
+    if cluster_sizes is None:
+        ppc = n_pods // C
+        w2r = w2.astype(jnp.float32).reshape((C, ppc))
+        # balanced grid: the member grid is a local reshape (this is the
+        # placed path — the rows are already cluster-sharded)
+        regroup = lambda a: a.reshape((C, ppc) + tuple(a.shape[1:]))
+    else:
+        sizes = [int(s) for s in cluster_sizes]
+        ppc = max(sizes)
+        idx = np.zeros((C, ppc), np.int64)
+        wm = np.zeros((C, ppc), np.float32)
+        s0 = 0
+        for c, s in enumerate(sizes):
+            idx[c, :s] = np.arange(s0, s0 + s)
+            wm[c, :s] = 1.0
+            s0 += s
+        flat_idx = jnp.asarray(idx.reshape(-1))
+        w2r = (jnp.take(w2.astype(jnp.float32), flat_idx, axis=0)
+               .reshape((C, ppc)) * jnp.asarray(wm))
+        regroup = lambda a: (jnp.take(a, flat_idx, axis=0)
+                             .reshape((C, ppc) + tuple(a.shape[1:])))
+    for g, p, dl in zip(g_leaves, p_leaves, d_leaves):
+        sliceable = all(getattr(a, "ndim", 0) >= 1
+                        and int(a.shape[0]) == n_pods
+                        for a in jax.tree.leaves(p))
+        rest = tuple(dl.shape[1:])
+        wshape = (C,) + (1,) * len(rest)
+        if sliceable:
+            pr = jax.tree.map(regroup, p)
+
+            def _body(i, acc, pr=pr, rest=rest, dl=dl, wshape=wshape):
+                p_i = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 1, keepdims=False), pr)
+                r = fmt.decode(p_i, (C,) + rest, dl.dtype)
+                w = jax.lax.dynamic_index_in_dim(
+                    w2r, i, 1, keepdims=False).reshape(wshape)
+                return acc + w * r.astype(jnp.float32)
+        else:
+            r_full = fmt.decode(p, dl.shape, dl.dtype)
+            rr = regroup(r_full)
+
+            def _body(i, acc, rr=rr, wshape=wshape):
+                r = jax.lax.dynamic_index_in_dim(rr, i, 1, keepdims=False)
+                w = jax.lax.dynamic_index_in_dim(
+                    w2r, i, 1, keepdims=False).reshape(wshape)
+                return acc + w * r.astype(jnp.float32)
+        acc = jax.lax.fori_loop(
+            0, ppc, _body, jnp.zeros((C,) + rest, jnp.float32))
+        out.append(acc)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _merge_cluster(w_global: Tree, cpayloads: Tree, stacked_t: Tree, fmt,
+                   denom, any_push, n_clusters: int) -> Tree:
+    """Fold the gathered per-cluster partials into the global model:
+    ``merged = g + (sum_c decode(R'_c)) / denom``.
+
+    ``stacked_t`` carries the ``(n_clusters,) + leaf`` shapes/dtypes the
+    cluster payload was encoded against (values never needed).
+    Row-indexed decode per ``lax.fori_loop`` step, so every intermediate
+    is leaf-shaped and the accumulate stays local wherever the gathered
+    payload landed — same placement/bit-identity argument as
+    ``_merge_sliced``.  There is deliberately no per-cluster weighting
+    here: the commit-time cluster-drop mask zeroes dropped clusters'
+    *payload rows* instead (:func:`_mask_cluster_rows`), so the merge
+    graph is one and the same in the sync round and in the commit half —
+    an in-loop multiplier, even by an exact ``1.0``, shifts XLA's fusion
+    enough to cost a ulp of parity.
+    """
+    C = int(n_clusters)
+    g_leaves, treedef = jax.tree.flatten(w_global)
+    p_leaves = treedef.flatten_up_to(cpayloads)
+    s_leaves = treedef.flatten_up_to(stacked_t)
+    out = []
+    for g, p, st in zip(g_leaves, p_leaves, s_leaves):
+        sliceable = all(getattr(a, "ndim", 0) >= 1
+                        and int(a.shape[0]) == C
+                        for a in jax.tree.leaves(p))
+        gf = g.astype(jnp.float32)
+        rest = tuple(st.shape[1:])
+        if sliceable:
+            def _body(c, acc, p=p, rest=rest, st=st):
+                p_c = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, c, 0, keepdims=False), p)
+                r = fmt.decode(p_c, rest, st.dtype).astype(jnp.float32)
+                return acc + r
+        else:
+            def _body(c, acc, p=p, st=st):
+                rr = fmt.decode(p, st.shape, st.dtype)
+                r = jax.lax.dynamic_index_in_dim(
+                    rr, c, 0, keepdims=False).astype(jnp.float32)
+                return acc + r
+        acc = jax.lax.fori_loop(0, C, _body,
+                                jnp.zeros(tuple(g.shape), jnp.float32))
+        merged = gf + acc / denom
+        out.append(jnp.where(any_push, merged, gf).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _mask_cluster_rows(cpayloads: Tree, keep_c: jnp.ndarray,
+                       n_clusters: int) -> Tree:
+    """Zero dropped clusters' rows of a gathered cluster payload.
+
+    Every wire array of the cluster payload is ``(n_clusters,)``-leading
+    by construction (it encodes a ``(n_clusters,) + leaf`` stack), and
+    every format decodes an all-zero row to exact zeros — zeroed scales
+    null int4/int8 rows, zeroed values null "none"/fp16 rows — so a
+    masked row contributes an exact ``+0.0`` to the merge accumulate.
+    Masking the operand instead of weighting inside the merge loop keeps
+    :func:`_merge_cluster` a single graph for both the sync and the
+    commit half (see its docstring).
+    """
+    C = int(n_clusters)
+
+    def _mask(a):
+        assert getattr(a, "ndim", 0) >= 1 and int(a.shape[0]) == C, (
+            "cluster payload arrays are (n_clusters,)-leading by "
+            "construction", getattr(a, "shape", None), C)
+        m = keep_c.reshape((C,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, jnp.zeros_like(a))
+
+    return jax.tree.map(_mask, cpayloads)
+
+
+def hermes_cluster_merge(pod_params: Tree, gates: jnp.ndarray,
+                         losses: jnp.ndarray, w_global: Tree, L: jnp.ndarray,
+                         *, n_clusters: int,
+                         cluster_sizes: Optional[Sequence[int]] = None,
+                         live: Optional[jnp.ndarray] = None,
+                         compression: str = "none",
+                         error: Optional[Tree] = None, rng=None,
+                         track_error: bool = True, mesh=None,
+                         pod_axis: str = "pod",
+                         cluster_axis: str = "cluster"
+                         ) -> Tuple[Tree, Tree, Optional[Tree], jnp.ndarray]:
+    """The two-tier gated loss-weighted merge (see the section comment).
+
+    Sender side is identical to :func:`hermes_merge`: gate-zeroed deltas,
+    pod-tier encode, pod-private error feedback.  The ship then happens
+    twice: the member payloads cross only the fast ``pod_axis``
+    (:func:`repro.dist.wire.gather_payloads_tiered` keeps them
+    cluster-sharded), each cluster reduces them to one weighted partial,
+    and the re-encoded ``(n_clusters,)``-stacked partials are the only
+    model-sized arrays crossing the slow ``cluster_axis``.  ``w1``, the
+    per-pod weights, and ``denom`` are computed from replicated
+    gates/losses, so the scalar bookkeeping needs no collective.
+
+    ``cluster_sizes`` supports uneven clusters (the post-shrink degraded
+    state) on the unplaced path only — a placed run flattens to the
+    single-tier round until the grid rebalances (``launch/elastic.py``).
+    Lossy formats requantize at the cluster tier WITHOUT error feedback
+    (deliberate; zero-mean for stochastic formats — DESIGN.md §10).
+
+    Returns ``(new_pod_params, new_w_global, new_error, any_push)``.
+    """
+    gates = gates.astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
+    n_pods = int(gates.shape[0])
+    C = int(n_clusters)
+    assert C >= 1, C
+    if cluster_sizes is not None:
+        assert mesh is None, (
+            "uneven cluster_sizes run unplaced; a placed run uses the "
+            "flat round until the cluster grid rebalances")
+    _cluster_index(n_pods, C, cluster_sizes)  # validates the split
+    any_push = jnp.any(gates)
+    w1 = 1.0 / jnp.maximum(jnp.asarray(L, jnp.float32), _EPS)
+    w2 = jnp.where(gates,
+                   1.0 / jnp.maximum(losses.astype(jnp.float32), _EPS), 0.0)
+    denom = w1 + jnp.sum(w2)
+
+    def _gate_zero(leaf):
+        return jnp.where(_pod_mask(gates, leaf), leaf, jnp.zeros_like(leaf))
+
+    fmt = get_format(compression)
+    delta = jax.tree.map(
+        lambda p, g: _gate_zero(p - g[None]), pod_params, w_global)
+    if compression != "none":
+        err_in = None if error is None else jax.tree.map(_gate_zero, error)
+        payloads, _, residual = encode_tree(
+            delta, compression, error=err_in, rng=rng,
+            with_residual=track_error)
+        if not track_error:
+            new_error = None
+        elif error is None:
+            new_error = jax.tree.map(_gate_zero, residual)
+        else:
+            new_error = jax.tree.map(
+                lambda r, e: jnp.where(_pod_mask(gates, r), r, e),
+                residual, error)
+    else:
+        # Lossless wire: unlike the flat merge (which ships gate-zeroed
+        # replicas), the two-tier path ships the DELTA uniformly for all
+        # formats — the partial-sum identity needs r_i, not w_i — and a
+        # lossless wire drops nothing, so the residual passes through.
+        payloads, _, _ = encode_tree(delta, compression, with_residual=False)
+        new_error = error if track_error else None
+
+    # Fast tier: every cluster gathers its own members' payload rows.
+    payloads = gather_payloads_tiered(payloads, mesh, axis=pod_axis,
+                                      keep=cluster_axis, n_rows=n_pods)
+    partials = _cluster_partials(w_global, payloads, delta, fmt, w2,
+                                 n_pods, C, cluster_sizes)
+    # Stacked (C,)+leaf partials in the leaf dtype, cluster-sharded, ready
+    # for the slow-tier re-encode (a fully closed cluster's partial is
+    # exact zeros, which every format encodes/decodes to exact zeros).
+    # The barrier keeps the accumulate's arithmetic independent of what
+    # consumes the re-encoded payload, so the sync round and the
+    # dispatch/commit split produce bit-identical cluster payloads.
+    partials = jax.tree.map(
+        lambda a, g: a.astype(g.dtype), partials, w_global)
+    partials = jax.lax.optimization_barrier(partials)
+    partials = pin_tier(partials, mesh, lead=cluster_axis, n_rows=C)
+    crng = None if rng is None else jax.random.fold_in(rng, 0x5C1)
+    cpayloads, _, _ = encode_tree(partials, compression, rng=crng,
+                                  with_residual=False)
+    # Barrier the wire bits too: in the dispatch/commit split the payload
+    # is a cond output (a natural fusion boundary); pinning it here keeps
+    # the sync round's encode arithmetic identical to dispatch's.
+    cpayloads = jax.lax.optimization_barrier(cpayloads)
+    # Slow tier: ONE payload per cluster crosses the cluster axis.
+    cpayloads = gather_payloads(cpayloads, mesh, axis=cluster_axis,
+                                n_pods=C)
+    stacked_t = jax.tree.map(
+        lambda g: jax.ShapeDtypeStruct((C,) + tuple(g.shape), g.dtype),
+        w_global)
+    new_global = _merge_cluster(w_global, cpayloads, stacked_t, fmt,
+                                denom, any_push, C)
+    new_pods = jax.tree.map(
+        lambda p, g: jnp.where(_pod_mask(gates, p), g[None], p),
+        pod_params, new_global)
+    return new_pods, new_global, new_error, any_push
+
+
+def hermes_cluster_round(pod_params: Tree, gup_state: Tree,
+                         pod_losses: jnp.ndarray, w_global: Tree,
+                         L: jnp.ndarray, cfg: HermesConfig, *,
+                         n_clusters: Optional[int] = None,
+                         cluster_sizes: Optional[Sequence[int]] = None,
+                         live: Optional[jnp.ndarray] = None,
+                         error: Optional[Tree] = None,
+                         use_kernel: Optional[bool] = None,
+                         rng=None, mesh=None, pod_axis: str = "pod",
+                         cluster_axis: str = "cluster") -> Dict[str, Any]:
+    """One full two-tier Level-B round: :func:`hermes_round` with the
+    merge replaced by :func:`hermes_cluster_merge`.
+
+    The cluster count resolves ``cluster_sizes`` > ``n_clusters`` >
+    ``cfg.n_clusters``; at an effective count of 1 this function is
+    *literally* :func:`hermes_round` — the flat twin is called verbatim,
+    so the ``n_clusters=1`` parity pin is bit-identity by construction.
+    ``use_kernel`` only reaches the flat path: the two-tier partials are
+    jnp-only (the fused/Pallas kernels keep serving the single-tier
+    merge).  Returns the same dict as ``hermes_round``.
+    """
+    C = resolve_n_clusters(cfg, n_clusters, cluster_sizes)
+    if C <= 1:
+        return hermes_round(pod_params, gup_state, pod_losses, w_global, L,
+                            cfg, live=live, error=error,
+                            use_kernel=use_kernel, rng=rng, mesh=mesh,
+                            pod_axis=pod_axis)
+    gates, new_gup = jax.vmap(
+        lambda s, x: gup_gate_jax(s, x, cfg))(gup_state, pod_losses)
+    gates = gates.astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
+    any_push = jnp.any(gates)
+    err_in = error if cfg.error_feedback else None
+    compressed = cfg.compression != "none"
+
+    def _open(args):
+        pods, wg, err = args
+        new_pods, new_global, new_error, _ = hermes_cluster_merge(
+            pods, gates, pod_losses, wg, L, n_clusters=C,
+            cluster_sizes=cluster_sizes, compression=cfg.compression,
+            error=err, rng=rng, track_error=cfg.error_feedback,
+            mesh=mesh, pod_axis=pod_axis, cluster_axis=cluster_axis)
+        return new_pods, new_global, new_error
+
+    def _closed(args):
+        pods, wg, err = args
+        if compressed and cfg.error_feedback and err is None:
+            err = jax.tree.map(jnp.zeros_like, pods)
+        return pods, wg, err
+
+    new_pods, new_global, new_error = jax.lax.cond(
+        any_push, _open, _closed, (pod_params, w_global, err_in))
+    return {
+        "pod_params": new_pods,
+        "w_global": new_global,
+        "gup": new_gup,
+        "error": new_error,
+        "gates": gates,
+        "any_push": any_push,
+    }
+
+
+def hermes_cluster_dispatch(pod_params: Tree, gup_state: Tree,
+                            pod_losses: jnp.ndarray, w_global: Tree,
+                            L: jnp.ndarray, cfg: HermesConfig, *,
+                            n_clusters: Optional[int] = None,
+                            cluster_sizes: Optional[Sequence[int]] = None,
+                            live: Optional[jnp.ndarray] = None,
+                            error: Optional[Tree] = None,
+                            rng=None, mesh=None, pod_axis: str = "pod",
+                            cluster_axis: str = "cluster") -> Dict[str, Any]:
+    """The dispatch half of a pipelined two-tier round.
+
+    The async ``pending`` buffer splits per tier at the collective that
+    matters: the fast intra-cluster gather AND the per-cluster partial
+    reduction retire *inside* dispatch (they ride the fast links, so
+    hiding them buys nothing), while the slow cluster-axis gather of the
+    re-encoded partials is what stays in flight — ``pending`` carries a
+    ``cluster_payload`` of ``(n_clusters,)``-row wire arrays instead of
+    the flat half's ``(n_pods,)``-row ``payload``.  Only the slow tier is
+    double-buffered, which is exactly the tier whose latency the overlap
+    exists to hide.
+
+    Delegates verbatim to :func:`hermes_dispatch` at an effective cluster
+    count of 1.  A closed round's pending buffer is a zero cluster-tier
+    payload (``payload_buffer_spec(w_global, mode, n_clusters)``); the
+    sender-side error residual updates here, at encode time, exactly as
+    in the flat dispatch.  Returns the ``hermes_dispatch`` dict shape
+    with the tiered ``pending``.
+    """
+    C = resolve_n_clusters(cfg, n_clusters, cluster_sizes)
+    if C <= 1:
+        return hermes_dispatch(pod_params, gup_state, pod_losses, w_global,
+                               L, cfg, live=live, error=error, rng=rng,
+                               mesh=mesh, pod_axis=pod_axis)
+    gates, new_gup = jax.vmap(
+        lambda s, x: gup_gate_jax(s, x, cfg))(gup_state, pod_losses)
+    gates = gates.astype(bool)
+    if live is not None:
+        gates = gates & live.astype(bool)
+    n_pods = int(gates.shape[0])
+    if cluster_sizes is not None:
+        assert mesh is None, (
+            "uneven cluster_sizes run unplaced; a placed run uses the "
+            "flat dispatch until the cluster grid rebalances")
+    _cluster_index(n_pods, C, cluster_sizes)
+    any_push = jnp.any(gates)
+    compressed = cfg.compression != "none"
+    track_error = cfg.error_feedback
+    err_in = error if track_error else None
+    w2 = jnp.where(gates,
+                   1.0 / jnp.maximum(pod_losses.astype(jnp.float32), _EPS),
+                   0.0)
+    fmt = get_format(cfg.compression)
+
+    def _gate_zero(leaf):
+        return jnp.where(_pod_mask(gates, leaf), leaf, jnp.zeros_like(leaf))
+
+    def _open(args):
+        pods, wg, err = args
+        delta = jax.tree.map(
+            lambda p, g: _gate_zero(p - g[None]), pods, wg)
+        if compressed:
+            e_in = None if err is None else jax.tree.map(_gate_zero, err)
+            payloads, _, residual = encode_tree(
+                delta, cfg.compression, error=e_in, rng=rng,
+                with_residual=track_error)
+            if not track_error:
+                new_error = None
+            elif err is None:
+                new_error = jax.tree.map(_gate_zero, residual)
+            else:
+                new_error = jax.tree.map(
+                    lambda r, e: jnp.where(_pod_mask(gates, r), r, e),
+                    residual, err)
+        else:
+            payloads, _, _ = encode_tree(delta, cfg.compression,
+                                         with_residual=False)
+            new_error = err
+        shipped = gather_payloads_tiered(payloads, mesh, axis=pod_axis,
+                                         keep=cluster_axis, n_rows=n_pods)
+        partials = _cluster_partials(wg, shipped, delta, fmt, w2,
+                                     n_pods, C, cluster_sizes)
+        # Same barrier as the sync merge: pins the partials' arithmetic
+        # against downstream fusion so both halves ship identical bits.
+        partials = jax.tree.map(lambda a, g: a.astype(g.dtype), partials, wg)
+        partials = jax.lax.optimization_barrier(partials)
+        partials = pin_tier(partials, mesh, lead=cluster_axis, n_rows=C)
+        crng = None if rng is None else jax.random.fold_in(rng, 0x5C1)
+        cpayloads, _, _ = encode_tree(partials, cfg.compression, rng=crng,
+                                      with_residual=False)
+        cpayloads = jax.lax.optimization_barrier(cpayloads)
+        cpayloads = gather_payloads(cpayloads, mesh, axis=cluster_axis,
+                                    n_pods=C)
+        return cpayloads, new_error
+
+    def _closed(args):
+        pods, wg, err = args
+        if compressed and track_error and err is None:
+            err = jax.tree.map(jnp.zeros_like, pods)
+        spec = payload_buffer_spec(wg, cfg.compression, C)
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        zeros = pin_gathered(zeros, mesh, axis=cluster_axis, n_pods=C)
+        return zeros, err
+
+    payload, new_error = jax.lax.cond(
+        any_push, _open, _closed, (pod_params, w_global, err_in))
+    pending = {
+        "cluster_payload": payload,
+        "gates": gates,
+        "losses": pod_losses.astype(jnp.float32),
+        "L": jnp.asarray(L, jnp.float32),
+        "any_push": any_push,
+    }
+    return {
+        "gup": new_gup,
+        "error": new_error,
+        "gates": gates,
+        "any_push": any_push,
+        "pending": pending,
+    }
+
+
+def hermes_cluster_commit(pod_params: Tree, pending: Dict[str, Any],
+                          w_global: Tree, *, cfg: HermesConfig,
+                          n_clusters: Optional[int] = None,
+                          cluster_sizes: Optional[Sequence[int]] = None,
+                          live: Optional[jnp.ndarray] = None,
+                          mesh=None, pod_axis: str = "pod",
+                          cluster_axis: str = "cluster") -> Dict[str, Any]:
+    """The commit half of a pipelined two-tier round: fold an in-flight
+    ``cluster_payload`` into the global model, one round late, with zero
+    collectives.
+
+    A flat pending buffer (no ``"cluster_payload"`` key — e.g. one
+    dispatched by the delegating ``n_clusters=1`` path) commits through
+    :func:`hermes_commit` verbatim.
+
+    ``live`` re-masks at **cluster granularity**: a cluster partial is an
+    inseparable weighted sum of its members' pushes, so if any pod whose
+    gate was open at dispatch has since died, its whole cluster's partial
+    is dropped (its payload rows are zeroed, an exact ``+0.0`` in the
+    merge) and every w2 the dropped partial carried leaves the
+    denominator — no posthumous merge, the same flush rule as the flat
+    commit, enforced at the granularity the wire actually shipped.
+    Survivors in a dropped cluster do not refresh (their push never
+    merged), so the returned ``gates`` clear their rows too; a pod that
+    died *ungated* costs its cluster nothing (its w2 was already zero at
+    dispatch).
+
+    Returns ``{"pod_params", "w_global", "gates", "any_push"}``.
+    """
+    if "cluster_payload" not in pending:
+        return hermes_commit(pod_params, pending, w_global, cfg=cfg,
+                             live=live, mesh=mesh, pod_axis=pod_axis)
+    gates_d = pending["gates"].astype(bool)
+    n_pods = int(gates_d.shape[0])
+    C = resolve_n_clusters(cfg, n_clusters, cluster_sizes)
+    cidx = jnp.asarray(_cluster_index(n_pods, C, cluster_sizes))
+    lv = (jnp.ones((n_pods,), bool) if live is None
+          else live.astype(bool))
+    dead_gated = gates_d & ~lv
+    dropped = jax.ops.segment_max(dead_gated.astype(jnp.int32), cidx,
+                                  num_segments=C)
+    keep_c = dropped == 0
+    keep_pod = keep_c[cidx]
+    gates = gates_d & lv & keep_pod
+    losses = pending["losses"].astype(jnp.float32)
+    L = pending["L"]
+    any_push = jnp.any(gates)
+    w1 = 1.0 / jnp.maximum(jnp.asarray(L, jnp.float32), _EPS)
+    w2 = jnp.where(gates_d & keep_pod,
+                   1.0 / jnp.maximum(losses, _EPS), 0.0)
+    denom = w1 + jnp.sum(w2)
+    payload = _mask_cluster_rows(pending["cluster_payload"], keep_c, C)
+    fmt = get_format(cfg.compression)
+    stacked_t = jax.tree.map(
+        lambda g: jax.ShapeDtypeStruct((C,) + tuple(g.shape), g.dtype),
+        w_global)
+
+    def _open(args):
+        pods, wg = args
+        new_global = _merge_cluster(wg, payload, stacked_t, fmt, denom,
+                                    any_push, C)
         new_pods = jax.tree.map(
             lambda p, g: jnp.where(_pod_mask(gates, p), g[None], p),
             pods, new_global)

@@ -102,9 +102,10 @@ def make_rules(mesh: Optional[Mesh], *, fsdp: bool = False,
 
     ``extra`` (the per-architecture divisibility-checked rules from
     ``launch/mesh.arch_rules``) overrides the base entry-by-entry.
-    ``multi_pod`` is accepted for signature symmetry: pod-axis placement is
-    entirely decided by the caller's "batch" rule, since pods hold model
-    *replicas*, never model shards.
+    ``multi_pod`` is accepted for signature symmetry: replica-tier
+    placement ("pod", and on the two-tier mesh "cluster") is entirely
+    decided by the caller's "batch" rule, since pods hold model
+    *replicas*, never model shards — see :func:`replica_axes`.
     """
     del multi_pod
     rules: Dict[str, Rule] = {name: None for name in _LOGICAL_AXES}
@@ -116,6 +117,21 @@ def make_rules(mesh: Optional[Mesh], *, fsdp: bool = False,
     if extra:
         rules.update(extra)
     return AxisRules(rules=rules, mesh=mesh)
+
+
+def replica_axes(mesh: Optional[Mesh]) -> tuple:
+    """The replica-tier mesh axes present on ``mesh``, slow tier first.
+
+    On the two-tier (cluster, pod, data, model) mesh this is
+    ``("cluster", "pod")``; on the flat multi-pod mesh ``("pod",)``; on a
+    (data, model) mesh (or no mesh) it is empty.  These are the axes a
+    pod-stacked tree's leading rows live on — the axes the Hermes wire
+    path gathers over — and the order matches the cluster-major row
+    layout of ``launch.mesh.make_pod_mesh``.
+    """
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("cluster", "pod") if a in mesh.axis_names)
 
 
 def constrain(x: jax.Array, rules: Optional[AxisRules],

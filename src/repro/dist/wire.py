@@ -582,6 +582,100 @@ def pin_gathered(tree: Any, mesh, *, axis: str = "pod",
     return jax.tree.map(_pin, tree)
 
 
+def gather_payloads_tiered(payloads: Any, mesh, *, axis: str = "pod",
+                           keep: str = "cluster",
+                           n_rows: Optional[int] = None) -> Any:
+    """The intra-cluster half of the two-tier ship (DESIGN.md §10): gather
+    a row-stacked payload tree across the fast ``axis`` tier while KEEPING
+    it sharded over the slow ``keep`` tier.
+
+    Same pin + ``optimization_barrier`` + re-pin idiom as
+    :func:`gather_payloads`, with tiered specs: the send side is
+    ``PS((keep, axis), U, ...)`` (every pod holds its own row slice of the
+    cluster-major stacking), the receive side ``PS(keep, U, ...)`` — each
+    cluster ends up holding ALL of its own members' rows, replicated
+    across its pods, while never seeing another cluster's.  XLA therefore
+    lowers the gather with replica groups confined to single clusters:
+    intra-cluster traffic only, which is exactly what the tiered byte
+    audit classifies.
+
+    Falls back to the flat :func:`gather_payloads` when ``keep`` is not a
+    mesh axis (a flat pod mesh has no slow tier); identity when ``mesh``
+    is ``None``.  ``n_rows`` guards which arrays count as row-stacked,
+    like ``n_pods`` in :func:`gather_payloads`.
+    """
+    if mesh is None:
+        return payloads
+    names = tuple(getattr(mesh, "axis_names", ()))
+    if keep not in names:
+        return gather_payloads(payloads, mesh, axis=axis, n_pods=n_rows)
+    sizes = dict(zip(names, mesh.devices.shape))
+    total = int(sizes.get(keep, 1)) * int(sizes.get(axis, 1))
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    U = PartitionSpec.UNCONSTRAINED
+    send0 = (keep, axis) if axis in names else (keep,)
+
+    def _pin(a, spec0):
+        if getattr(a, "ndim", 0) < 1:
+            return a
+        lead = int(a.shape[0])
+        if n_rows is not None and lead != int(n_rows):
+            return a
+        if lead % max(1, total) != 0:
+            return a
+        spec = PartitionSpec(spec0, *([U] * (a.ndim - 1)))
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec))
+
+    sent = jax.tree.map(lambda a: _pin(a, send0), payloads)
+    sent = jax.lax.optimization_barrier(sent)
+    return jax.tree.map(lambda a: _pin(a, keep), sent)
+
+
+def pin_tier(tree: Any, mesh, *, lead, n_rows: Optional[int] = None) -> Any:
+    """Re-assert a leading-axis constraint on values derived from a tiered
+    gather — :func:`pin_gathered` generalized to an arbitrary leading
+    spec.
+
+    ``lead`` is the PartitionSpec entry for the row axis: an axis name
+    (``"cluster"``: keep the rows cluster-sharded so the per-cluster
+    partial sums stay local), a tuple of names, or ``None`` (fully
+    replicated, the classic receive pin).  Trailing dims stay
+    ``UNCONSTRAINED``.  Arrays whose leading dim is not ``n_rows`` (when
+    given) or does not divide the named axes' total size pass through
+    unpinned; identity without a mesh or when any named axis is absent.
+    """
+    if mesh is None:
+        return tree
+    names = tuple(getattr(mesh, "axis_names", ()))
+    members = (() if lead is None else
+               ((lead,) if isinstance(lead, str) else tuple(lead)))
+    if any(m not in names for m in members):
+        return tree
+    sizes = dict(zip(names, mesh.devices.shape))
+    total = 1
+    for m in members:
+        total *= int(sizes.get(m, 1))
+    spec0 = (None if not members else
+             (members[0] if len(members) == 1 else members))
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    U = PartitionSpec.UNCONSTRAINED
+
+    def _pin(a):
+        if getattr(a, "ndim", 0) < 1:
+            return a
+        lead_n = int(a.shape[0])
+        if n_rows is not None and lead_n != int(n_rows):
+            return a
+        if lead_n % max(1, total) != 0:
+            return a
+        spec = PartitionSpec(spec0, *([U] * (a.ndim - 1)))
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec))
+
+    return jax.tree.map(_pin, tree)
+
+
 # ---------------------------------------------------------------------------
 # Round-level wire audit: what SHOULD cross the pod axis, and did it
 # ---------------------------------------------------------------------------
@@ -638,9 +732,31 @@ def wire_operand_specs(tree: Any, mode: str, n_pods: int
     return specs
 
 
+def cluster_wire_operand_specs(tree: Any, mode: str, n_clusters: int
+                               ) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """The expected **slow-tier** operands of one two-tier round: the
+    re-encoded per-cluster partial sums.
+
+    The two-tier merge (DESIGN.md §10) reduces each cluster's gated
+    weighted deltas to ONE model-shaped partial, stacks the partials on a
+    leading ``(n_clusters,)`` axis, re-encodes, and ships only that across
+    the cluster axis — so the cluster-crossing operand set is exactly
+    :func:`wire_operand_specs` of the same tree with ``n_clusters`` rows:
+    per-device dims ``(1,) + rest`` of the encode of the
+    ``(n_clusters,) + leaf`` stacked tree.  Slow-tier model-sized bytes
+    therefore scale with ``n_clusters``, not ``n_pods`` — the byte-scaling
+    claim the tiered audit asserts.
+    """
+    return wire_operand_specs(tree, mode, n_clusters)
+
+
 def classify_round_collectives(records: List[Dict], specs,
                                *, control_bytes: Optional[int] = None,
-                               n_pods: int = 2) -> Dict[str, Any]:
+                               n_pods: int = 2,
+                               n_devices: Optional[int] = None,
+                               n_clusters: Optional[int] = None,
+                               cluster_records: Optional[List[Dict]] = None,
+                               cluster_specs=None) -> Dict[str, Any]:
     """Match a lowered round's cross-pod collective operands against the
     expected wire specs (:func:`wire_operand_specs`).
 
@@ -648,10 +764,29 @@ def classify_round_collectives(records: List[Dict], specs,
     allowance constant) moved to :mod:`repro.analysis.collectives`, where
     the ``collective-placement`` rule reuses it.  Imported lazily so the
     wire registry keeps zero analyzer dependencies at import time.
+
+    With ``n_clusters`` (two-tier rounds), ``records`` must already be the
+    pod-crossing set and ``cluster_records`` the cluster-crossing subset
+    (``repro.analysis.hlo_parse.cross_pod_collectives`` with the two
+    divisors); the intra-cluster remainder is classified against ``specs``
+    (the fast tier) and ``cluster_records`` against ``cluster_specs``
+    (:func:`cluster_wire_operand_specs`), returned under a ``"cluster"``
+    key.  ``n_devices`` is accepted for signature symmetry with the rule.
     """
     from repro.analysis.collectives import classify_collectives
-    return classify_collectives(records, specs,
-                                control_bytes=control_bytes, n_pods=n_pods)
+    del n_devices
+    if n_clusters is None or cluster_records is None:
+        return classify_collectives(records, specs,
+                                    control_bytes=control_bytes,
+                                    n_pods=n_pods)
+    cluster_ids = {id(r) for r in cluster_records}
+    intra = [r for r in records if id(r) not in cluster_ids]
+    out = classify_collectives(intra, specs, control_bytes=control_bytes,
+                               n_pods=n_pods)
+    out["cluster"] = classify_collectives(
+        cluster_records, list(cluster_specs or ()),
+        control_bytes=control_bytes, n_pods=n_pods)
+    return out
 
 
 # ---------------------------------------------------------------------------

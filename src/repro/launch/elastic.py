@@ -66,7 +66,8 @@ from repro.core.allocator import (
 )
 from repro.core.gup import gup_state_jax
 from repro.dist.hermes_sync import (
-    hermes_commit, hermes_grow_pod_state, hermes_pod_state, hermes_round,
+    hermes_cluster_commit, hermes_cluster_round, hermes_grow_pod_state,
+    hermes_pod_state, hermes_round,
 )
 from repro.launch.mesh import (
     arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
@@ -119,7 +120,10 @@ POD_STACKED_KEYS = ("pod_params", "gup", "error")
 def flush_pending(state: Dict[str, Any], *,
                   cfg: Optional[HermesConfig] = None,
                   live: Optional[Sequence[bool]] = None,
-                  mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+                  mesh: Optional[Mesh] = None,
+                  n_clusters: Optional[int] = None,
+                  cluster_sizes: Optional[Sequence[int]] = None
+                  ) -> Dict[str, Any]:
     """Commit an async in-flight payload before a membership resize.
 
     The async pipelined loop (DESIGN.md §8) carries a ``pending`` buffer —
@@ -127,11 +131,16 @@ def flush_pending(state: Dict[str, Any], *,
     *current* pod count; a resize would orphan it, and naively merging it
     afterwards would let a dead pod's in-flight push land posthumously.
     The rule is: **flush first, under the survivor mask**.
-    ``hermes_commit(live=...)`` re-masks the dispatch-time gates with the
-    current membership, so a dropped pod's payload row gets merge weight
-    zero and no refresh — its push never merges — while the survivors'
-    in-flight contributions land exactly as a synchronous round would
-    have merged them.
+    The commit re-masks the dispatch-time gates with the current
+    membership, so a dropped pod's payload row gets merge weight zero and
+    no refresh — its push never merges — while the survivors' in-flight
+    contributions land exactly as a synchronous round would have merged
+    them.  A two-tier buffer (``cluster_payload``, DESIGN.md §10) commits
+    through :func:`repro.dist.hermes_sync.hermes_cluster_commit`, whose
+    cluster-granular re-mask drops the *whole cluster* of any dead gated
+    pod — an aggregated partial cannot shed one member — and a flat
+    buffer takes the single-tier commit verbatim (the dispatcher
+    self-selects on the pending keys).
 
     Returns ``state`` with the commit applied to ``pod_params`` /
     ``w_global`` and ``pending`` cleared (``None``); a state with no
@@ -145,8 +154,11 @@ def flush_pending(state: Dict[str, Any], *,
         return state
     cfg = cfg or HermesConfig()
     lv = None if live is None else jnp.asarray(np.asarray(live, bool))
-    cm = hermes_commit(state["pod_params"], pending, state["w_global"],
-                       cfg=cfg, live=lv, mesh=mesh)
+    cm = hermes_cluster_commit(state["pod_params"], pending,
+                               state["w_global"], cfg=cfg,
+                               n_clusters=n_clusters,
+                               cluster_sizes=cluster_sizes,
+                               live=lv, mesh=mesh)
     return {**state, "pod_params": cm["pod_params"],
             "w_global": cm["w_global"], "pending": None}
 
@@ -168,7 +180,8 @@ def _reshard(tree: Tree, spec_tree: Optional[Tree],
 def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
                    mesh: Optional[Mesh], *,
                    cfg: Optional[HermesConfig] = None,
-                   specs: Optional[Dict[str, Any]] = None
+                   specs: Optional[Dict[str, Any]] = None,
+                   cluster: Optional[int] = None
                    ) -> Tuple[Dict[str, Any], Optional[Mesh]]:
     """Resize the Level-B Hermes state from ``n_pods`` to ``len(keep)``.
 
@@ -179,6 +192,15 @@ def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
     pytrees in ``specs`` (absent keys replicate); ``mesh=None`` skips
     placement entirely (single-device / host use).  Refuses to shrink
     below ``cfg.min_live_pods``.
+
+    On a two-tier (cluster, pod, ...) mesh the failure domain is
+    cluster-local: pass ``cluster=c`` to assert every dropped pod lives
+    in cluster ``c`` (``keep`` stays GLOBAL pod rows), and the mesh
+    shrinks via ``launch.mesh.shrink_mesh(..., cluster=c)`` — only that
+    cluster's rows move, every other cluster's devices stay put.  The
+    result is a *flat* pod mesh (the cluster grid is no longer uniform);
+    rounds run single-tier — or unplaced with explicit uneven
+    ``cluster_sizes`` — until a grow rebalances the grid.
 
     An async ``pending`` buffer in ``state`` is flushed first under the
     survivor mask (:func:`flush_pending`): the dropped pods' in-flight
@@ -197,7 +219,24 @@ def elastic_shrink(state: Dict[str, Any], keep: Sequence[int],
         live = np.zeros((n_pods,), bool)
         live[np.asarray(keep, int)] = True
         state = flush_pending(state, cfg=cfg, live=live, mesh=mesh)
-    new_mesh = shrink_mesh(mesh, keep) if mesh is not None else None
+    if mesh is None:
+        new_mesh = None
+    elif cluster is not None and "cluster" in mesh.axis_names:
+        n_c = mesh.devices.shape[list(mesh.axis_names).index("cluster")]
+        ppc = mesh.devices.shape[list(mesh.axis_names).index("pod")]
+        assert 0 <= cluster < n_c, (cluster, n_c)
+        lo, hi = cluster * ppc, (cluster + 1) * ppc
+        outside = [k for k in range(n_c * ppc)
+                   if not lo <= k < hi and k not in keep]
+        if outside:
+            raise ValueError(
+                f"cluster={cluster} shrink but pods {outside} outside "
+                f"that cluster are also dropped; the failure domain "
+                f"must stay cluster-local")
+        local = sorted(k - lo for k in keep if lo <= k < hi)
+        new_mesh = shrink_mesh(mesh, local, cluster=cluster)
+    else:
+        new_mesh = shrink_mesh(mesh, keep)
     out: Dict[str, Any] = {}
     for k, v in state.items():
         v = shrink_pod_tree(v, keep) if k in POD_STACKED_KEYS else v
@@ -228,7 +267,8 @@ def grow_pod_tree(tree: Tree, new_row: Tree, n_new: int = 1) -> Tree:
 def elastic_grow(state: Dict[str, Any], mesh: Optional[Mesh], *,
                  cfg: Optional[HermesConfig] = None,
                  specs: Optional[Dict[str, Any]] = None,
-                 remaining_rounds: Optional[float] = None
+                 remaining_rounds: Optional[float] = None,
+                 n_clusters: Optional[int] = None
                  ) -> Tuple[Dict[str, Any], Optional[Mesh]]:
     """Re-admit one pod: resize the Level-B Hermes state from ``n_pods``
     to ``n_pods + 1``, the inverse of ``elastic_shrink``.
@@ -251,8 +291,14 @@ def elastic_grow(state: Dict[str, Any], mesh: Optional[Mesh], *,
     An async ``pending`` buffer is flushed first (:func:`flush_pending`,
     all incumbents live — they all dispatched it): its arrays are sized
     to the pre-grow pod count, and committing before the append keeps the
-    newcomer out of a merge it never dispatched into.  Returns
-    ``(new_state, regrown_mesh)``.
+    newcomer out of a merge it never dispatched into.
+
+    ``n_clusters`` restores the two-tier grid after a cluster-local
+    shrink: the regrown mesh (which appends the newcomer's devices at
+    the END, i.e. the last row of the last cluster) is regrouped to a
+    (cluster, pod, ...) mesh when the new pod count divides evenly —
+    the round trip shrink(last cluster) -> grow(n_clusters=C) is exact
+    (``launch.mesh.grow_mesh``).  Returns ``(new_state, regrown_mesh)``.
     """
     cfg = cfg or HermesConfig()
     if state.get("pending") is not None:
@@ -265,7 +311,8 @@ def elastic_grow(state: Dict[str, Any], mesh: Optional[Mesh], *,
             f"re-admission denied: expected gain "
             f"{rejoin_gain_rounds(n_pods, remaining_rounds):.2f} rounds "
             f"does not amortize rejoin_cost_rounds={cfg.rejoin_cost_rounds}")
-    new_mesh = grow_mesh(mesh, 1) if mesh is not None else None
+    new_mesh = (grow_mesh(mesh, 1, n_clusters=n_clusters)
+                if mesh is not None else None)
 
     # the newcomer's row per pod-stacked key; a key added to
     # POD_STACKED_KEYS without a seeding rule here must fail loudly, not
@@ -676,6 +723,142 @@ def rejoin_pod_equivalence(*, n_pods: int = 2, rounds_before: int = 3,
     }
 
 
+def cluster_resize_cycle_equivalence(*, n_pods: int = 4, n_clusters: int = 2,
+                                     cycles: int = 3, rounds_full: int = 2,
+                                     rounds_shrunk: int = 2,
+                                     cfg: Optional[HermesConfig] = None,
+                                     seed: int = 0) -> Dict[str, Any]:
+    """Repeated cluster-local shrink->grow->shrink cycles leave no scar.
+
+    The two-tier analogue of ``rejoin_pod_equivalence``, iterated: in
+    every cycle the LAST pod of the LAST cluster dies (one masked
+    two-tier round), the state shrinks (``elastic_shrink``), runs
+    ``rounds_shrunk`` rounds with the degraded uneven cluster split
+    (``cluster_sizes=[ppc, ..., ppc-1]``), grows back
+    (``elastic_grow``) and resumes the balanced ``n_clusters`` grid —
+    at least three full cycles, so a scar left by cycle k (a stale GUP
+    row, a mis-seeded residual, an off-by-one cluster index) compounds
+    and must surface by cycle k+1.
+
+    Path B, the oracle, never resizes: it runs every round at ``n_pods``
+    rows with the dead stretch live-masked, and re-seeds the dead row in
+    place at each grow boundary (pod_params = ``w_global``, fresh GUP
+    queue, zero error) — exactly the newcomer ``elastic_grow`` appends.
+    Every tensor must match **bit-identically** across all cycles, which
+    is the per-cluster membership claim of DESIGN.md §10: a masked
+    member costs its cluster an exact ``+0.0`` partial term, so the
+    degraded uneven split and the masked balanced split ship the same
+    cluster payloads.
+
+    Runs unplaced (the uneven ``cluster_sizes`` stretch is host-side by
+    design; ``launch/hermes_dryrun.py --clusters`` carries the placed
+    per-cluster shrink proof).
+    """
+    cfg = cfg or HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                              compression="int8", min_live_pods=1,
+                              rejoin_cost_rounds=0.0,
+                              n_clusters=n_clusters)
+    assert n_pods % n_clusters == 0 and n_pods // n_clusters >= 1
+    assert cycles >= 3, "fewer cycles cannot catch compounding scars"
+    ppc = n_pods // n_clusters
+    drop = n_pods - 1          # last pod of the last cluster
+    keep = list(range(n_pods - 1))
+    sizes_shrunk = [ppc] * (n_clusters - 1) + [ppc - 1]
+    if sizes_shrunk[-1] == 0:
+        sizes_shrunk = sizes_shrunk[:-1]
+
+    def rounds(pods, gup, err, wg, n, start, *, live=None, sizes=None):
+        step = jax.jit(
+            lambda p, g, e, w, losses, lv: hermes_cluster_round(
+                p, g, losses, w, jnp.float32(1.0), cfg, live=lv, error=e,
+                n_clusters=(None if sizes is not None else n_clusters),
+                cluster_sizes=sizes),
+            static_argnames=())
+        np_ = jax.tree.leaves(pods)[0].shape[0]
+        lv = (np.ones((np_,), bool) if live is None
+              else np.asarray(live, bool))
+        for r in range(start, start + n):
+            losses = _demo_losses(n_pods, r)[:np_]
+            losses = np.where(lv, losses, np.nan)
+            out = step(pods, gup, err, wg, jnp.asarray(losses),
+                       jnp.asarray(lv))
+            pods, gup, err, wg = (out["pod_params"], out["gup"],
+                                  out["error"], out["w_global"])
+        return pods, gup, err, wg
+
+    pods0, wg0, gup0 = _toy_pod_state(n_pods, cfg, seed)
+    a = {"pods": pods0, "gup": gup0, "err": None, "wg": wg0}
+    b = {k: v for k, v in a.items()}
+    live_mask = np.ones((n_pods,), bool)
+    live_mask[drop] = False
+    fresh = gup_state_jax(cfg)
+    r0 = 0
+    for cyc in range(cycles):
+        # full-membership balanced rounds
+        a["pods"], a["gup"], a["err"], a["wg"] = rounds(
+            a["pods"], a["gup"], a["err"], a["wg"], rounds_full, r0)
+        b["pods"], b["gup"], b["err"], b["wg"] = rounds(
+            b["pods"], b["gup"], b["err"], b["wg"], rounds_full, r0)
+        r0 += rounds_full
+        # death: poison + one masked balanced round, both paths
+        for s in (a, b):
+            s["pods"] = jax.tree.map(lambda x: x.at[drop].set(jnp.nan),
+                                     s["pods"])
+            s["pods"], s["gup"], s["err"], s["wg"] = rounds(
+                s["pods"], s["gup"], s["err"], s["wg"], 1, r0,
+                live=live_mask)
+        r0 += 1
+        # path A shrinks to the uneven split; path B stays masked
+        st, _ = elastic_shrink(
+            {"pod_params": a["pods"], "gup": a["gup"], "error": a["err"],
+             "w_global": a["wg"]}, keep, None, cfg=cfg)
+        a = {"pods": st["pod_params"], "gup": st["gup"],
+             "err": st["error"], "wg": st["w_global"]}
+        a["pods"], a["gup"], a["err"], a["wg"] = rounds(
+            a["pods"], a["gup"], a["err"], a["wg"], rounds_shrunk, r0,
+            sizes=sizes_shrunk)
+        b["pods"], b["gup"], b["err"], b["wg"] = rounds(
+            b["pods"], b["gup"], b["err"], b["wg"], rounds_shrunk, r0,
+            live=live_mask)
+        r0 += rounds_shrunk
+        # grow back to the balanced grid; oracle re-seeds the row in place
+        st, _ = elastic_grow(
+            {"pod_params": a["pods"], "gup": a["gup"], "error": a["err"],
+             "w_global": a["wg"]}, None, cfg=cfg)
+        a = {"pods": st["pod_params"], "gup": st["gup"],
+             "err": st["error"], "wg": st["w_global"]}
+        b["pods"] = jax.tree.map(
+            lambda x, g: x.at[drop].set(g.astype(x.dtype)),
+            b["pods"], b["wg"])
+        b["gup"] = jax.tree.map(
+            lambda x, f: x.at[drop].set(f.astype(x.dtype)),
+            b["gup"], fresh)
+        b["err"] = jax.tree.map(lambda x: x.at[drop].set(0.0), b["err"])
+        for name in ("pods", "gup", "err", "wg"):
+            for x, y in zip(jax.tree.leaves(jax.tree.map(np.asarray,
+                                                         a[name])),
+                            jax.tree.leaves(jax.tree.map(np.asarray,
+                                                         b[name]))):
+                np.testing.assert_array_equal(
+                    x, y, err_msg=f"cycle {cyc}, {name}: resize cycle "
+                                  f"left a scar vs the never-resized "
+                                  f"oracle")
+    return {
+        "n_pods": n_pods, "n_clusters": n_clusters, "cycles": cycles,
+        "rounds": r0, "compression": cfg.compression,
+        "shrunk_cluster_sizes": sizes_shrunk,
+        "bit_identical": True,
+    }
+
+
+def run_hermes_cluster_resize_demo(n_pods: int = 4, n_clusters: int = 2,
+                                   seed: int = 0) -> Dict[str, Any]:
+    """Three shrink->grow->shrink cycles on the two-tier round, checked
+    bit-exactly against the never-resized masked oracle per cycle."""
+    return cluster_resize_cycle_equivalence(
+        n_pods=n_pods, n_clusters=n_clusters, cycles=3, seed=seed)
+
+
 def run_hermes_rejoin_demo(n_pods: int = 4, seed: int = 0) -> Dict[str, Any]:
     """The in-flight pod-join demo: shrink->grow equivalence, policy
     decisions, and the newcomer's data re-split."""
@@ -794,4 +977,5 @@ def run_demo(arch: str = "qwen3-8b", steps_before: int = 5,
 if __name__ == "__main__":
     print(json.dumps({"hermes_shrink": run_hermes_shrink_demo(),
                       "hermes_rejoin": run_hermes_rejoin_demo(),
+                      "hermes_cluster_resize": run_hermes_cluster_resize_demo(),
                       "checkpoint_restart": run_demo()}, indent=2))

@@ -54,7 +54,7 @@ from repro.launch.mesh import (
     arch_parallel_config, arch_rules, grow_mesh, make_pod_mesh, shrink_mesh,
 )
 from repro.launch.steps import abstract_init_lm, _shard_tree
-from repro.roofline.hlo_parse import parse_hlo_cost
+from repro.analysis.hlo_parse import parse_hlo_cost
 
 
 def _compress_audit(mesh, hcfg, abstract_params, base_shardings):
@@ -264,6 +264,157 @@ def _round_byte_audit(mesh, hcfg, abstract_params, formats):
     return out
 
 
+def _cluster_audit(cmesh, hcfg, abstract_params, formats):
+    """The two-tier byte audit (DESIGN.md §10, the ISSUE 9 acceptance
+    gate): lower the **full** ``hermes_cluster_round`` per wire format on
+    the (cluster, pod, data, model) mesh, split its pod-crossing
+    collectives into the fast intra-cluster tier and the slow
+    cluster-crossing tier, and assert
+
+    * every intra-cluster model-sized operand is one of the billed
+      per-pod wire arrays (``wire_operand_specs``), bytes equal the bill;
+    * every **cluster-crossing** model-sized operand is one of the
+      re-encoded per-cluster partials (``cluster_wire_operand_specs`` —
+      exactly ``n_clusters`` packed payload rows), bytes equal the bill:
+      slow-tier traffic scales with ``n_clusters``, not ``n_pods``;
+    * the closed round crosses nothing on either tier.
+    """
+    from repro.dist.hermes_sync import hermes_cluster_round
+    from repro.dist.wire import cluster_wire_operand_specs
+
+    n_clusters, ppc = (int(cmesh.devices.shape[0]),
+                       int(cmesh.devices.shape[1]))
+    n_pods = n_clusters * ppc
+    n_dev = int(cmesh.devices.size)
+    params32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), abstract_params)
+    pod_params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype), params32)
+    rows = PS(("cluster", "pod"))
+    pod_sh = jax.tree.map(lambda _: NamedSharding(cmesh, rows), pod_params)
+    rep = NamedSharding(cmesh, PS())
+    rep_tree = jax.tree.map(lambda _: rep, params32)
+    losses = jax.ShapeDtypeStruct((n_pods,), jnp.float32)
+    n_elts = sum(math.prod(s.shape) for s in jax.tree.leaves(params32))
+    rng = jax.random.PRNGKey(0)
+    out = {}
+    for name in formats:
+        cfg_f = dataclasses.replace(hcfg, compression=name,
+                                    n_clusters=n_clusters)
+        gup = hermes_pod_state(cfg_f, n_pods)
+        gup_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), gup)
+        gup_sh = jax.tree.map(lambda _: NamedSharding(cmesh, rows), gup)
+
+        def open_fn(pod_p, gs, pl, wg, _cfg=cfg_f):
+            o = hermes_cluster_round(pod_p, gs, pl, wg, jnp.float32(1.0),
+                                     cfg=_cfg, rng=rng, mesh=cmesh)
+            return o["pod_params"], o["w_global"], o["any_push"]
+
+        def closed_fn(pod_p, gs, pl, wg, _cfg=cfg_f):
+            o = hermes_cluster_round(pod_p, gs, pl, wg, jnp.float32(1.0),
+                                     cfg=_cfg,
+                                     live=jnp.zeros((n_pods,), bool),
+                                     rng=rng, mesh=cmesh)
+            return o["pod_params"], o["w_global"], o["any_push"]
+
+        with cmesh:
+            shardings = (pod_sh, gup_sh, rep, rep_tree)
+            hlo = (jax.jit(open_fn, in_shardings=shardings)
+                   .lower(pod_params, gup_sds, losses, params32)
+                   .compile().as_text())
+            closed_hlo = (jax.jit(closed_fn, in_shardings=shardings)
+                          .lower(pod_params, gup_sds, losses, params32)
+                          .compile().as_text())
+
+        specs = wire_operand_specs(params32, name, n_pods)
+        cspecs = cluster_wire_operand_specs(params32, name, n_clusters)
+        billed = payload_bytes(params32, name)  # per row == per device
+        rule = CollectivePlacement(
+            specs, n_devices=n_dev, n_pods=n_pods, billed_bytes=billed,
+            n_clusters=n_clusters, cluster_specs=cspecs,
+            cluster_billed_bytes=billed)
+        analyze(hlo, rules=[rule], label=f"cluster_byte_audit[{name}]")
+        icls = rule.classification
+        ccls = rule.cluster_classification
+        rule_c = CollectivePlacement(n_devices=n_dev, n_pods=n_pods,
+                                     expect_none=True)
+        analyze(closed_hlo, rules=[rule_c],
+                label=f"cluster_byte_audit_closed[{name}]")
+        out[name] = {
+            "billed_bytes_per_row": billed,
+            "bytes_per_element": round(billed / n_elts, 6),
+            "intra_gather_bytes_per_pod": icls["payload_bytes"],
+            "cluster_gather_bytes_per_device": ccls["payload_bytes"],
+            # the scaling claim, as totals: n_clusters packed rows cross
+            # the slow tier where a flat round ships n_pods of them
+            "slow_tier_total_bytes": ccls["payload_bytes"] * n_clusters,
+            "flat_equiv_total_bytes": billed * n_pods,
+            "intra_cluster_collectives": len(rule.records)
+                                         - len(rule.cluster_records),
+            "cluster_crossing_collectives": len(rule.cluster_records),
+            "closed_cross_pod_collectives": len(rule_c.records),
+        }
+        assert out[name]["slow_tier_total_bytes"] < \
+            out[name]["flat_equiv_total_bytes"], out[name]
+    return out
+
+
+def _cluster_parity_pin(formats, *, n_pods: int = 4,
+                        rounds: int = 6) -> dict:
+    """The ``n_clusters=1`` parity pin: a cluster round at one cluster must
+    be **bit-identical** to ``hermes_round``, for every wire format, over
+    several executed rounds (losses chosen so gates actually open).  The
+    implementation delegates verbatim at ``C <= 1``, so this pins the
+    delegation against future drift rather than re-proving algebra.
+    """
+    import numpy as np
+    from repro.dist.hermes_sync import (gup_state_jax, hermes_cluster_round,
+                                        hermes_round)
+
+    shapes = ((8, 16), (16,))
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, len(shapes) + 1)
+    for name in formats:
+        hcfg = HermesConfig(alpha=-0.5, beta=0.1, lam=2, window=4,
+                            compression=name,
+                            error_feedback=name in ("int8", "int4"),
+                            n_clusters=1)
+        wg = [jax.random.normal(ks[i], s, jnp.float32)
+              for i, s in enumerate(shapes)]
+        pods = [wg[i][None] + 0.01 * jax.random.normal(
+                    ks[-1], (n_pods,) + s, jnp.float32)
+                for i, s in enumerate(shapes)]
+        a = {"pods": pods, "gup": jax.vmap(
+                 lambda _: gup_state_jax(hcfg))(jnp.arange(n_pods)),
+             "wg": wg, "err": None}
+        b = {k: v for k, v in a.items()}
+        rng = jax.random.PRNGKey(7)
+        for r in range(rounds):
+            # descending then spiking losses walk the GUP gate open
+            pl = jnp.asarray([1.0 / (r + 1) + 0.1 * i
+                              for i in range(n_pods)], jnp.float32)
+            L = jnp.asarray(0.5 / (r + 1), jnp.float32)
+            ra = hermes_cluster_round(a["pods"], a["gup"], pl, a["wg"], L,
+                                      cfg=hcfg, error=a["err"],
+                                      rng=jax.random.fold_in(rng, r))
+            rb = hermes_round(b["pods"], b["gup"], pl, b["wg"], L, hcfg,
+                              error=b["err"], rng=jax.random.fold_in(rng, r))
+            a = {"pods": ra["pod_params"], "gup": ra["gup"],
+                 "wg": ra["w_global"], "err": ra["error"]}
+            b = {"pods": rb["pod_params"], "gup": rb["gup"],
+                 "wg": rb["w_global"], "err": rb["error"]}
+            for x, y in zip(jax.tree.leaves((ra["pod_params"],
+                                             ra["w_global"], ra["gup"])),
+                            jax.tree.leaves((rb["pod_params"],
+                                             rb["w_global"], rb["gup"]))):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"nc=1 parity drift: format={name} round={r}")
+    return {"formats": list(formats), "rounds": rounds,
+            "bit_identical": True}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -286,6 +437,14 @@ def main() -> None:
                          "bytes equal the billed payload_bytes (int4 must "
                          "ship <= 0.5625 B/element at round level; the "
                          "closed round must cross nothing)")
+    ap.add_argument("--clusters", type=int, default=1,
+                    help="with N > 1, additionally audit the two-tier "
+                         "round on a (N, 2, data, model) cluster mesh: "
+                         "per format, exactly N packed payloads may cross "
+                         "the cluster axis per open round; n_clusters=1 "
+                         "must stay bit-identical to hermes_round; a "
+                         "per-cluster shrink keeps the compress step "
+                         "collective-free")
     args = ap.parse_args()
 
     # (2, 16, 16) at the default 512 forced devices; REPRO_DRYRUN_DEVICES
@@ -443,6 +602,43 @@ def main() -> None:
             f"{len(drift)} leaves pick a sharded-but-misaligned blocked "
             f"axis: {drift[:3]}")
         rec["block_axis_hint_drift"] = len(drift)
+
+    if args.clusters > 1:
+        from repro.dist.wire import available_formats
+        from repro.launch.elastic import cluster_resize_cycle_equivalence
+
+        # two pods per cluster on the smallest mesh that exhibits both
+        # tiers (2 clusters -> 8 devices under REPRO_DRYRUN_DEVICES=8)
+        cmesh = make_pod_mesh(
+            2 * args.clusters, n_clusters=args.clusters,
+            max_devices=min(jax.device_count(), 4 * args.clusters))
+        rec["cluster_audit"] = {
+            "mesh": list(cmesh.devices.shape),
+            "n_clusters": args.clusters,
+            "byte_audit": _cluster_audit(cmesh, hcfg, abstract_params,
+                                         available_formats()),
+            "parity_nc1": _cluster_parity_pin(available_formats()),
+        }
+
+        # per-cluster shrink (DESIGN.md §7/§10): kill the last pod of the
+        # last cluster; the flattened cluster-major survivors' mesh must
+        # keep the compress step collective-free, and repeated
+        # shrink->grow->shrink cycles stay bit-identical to never having
+        # resized (the Level-B elastic oracle, per cluster)
+        ppc = int(cmesh.devices.shape[1])
+        small = shrink_mesh(cmesh, list(range(ppc - 1)),
+                            cluster=args.clusters - 1)
+        small_base = jax.tree.map(
+            lambda sh: NamedSharding(small, sh.spec), base_shardings)
+        s_cost, s_ag, _, _, _ = _compress_audit(
+            small, hcfg, abstract_params, small_base)
+        rec["cluster_audit"]["shrink"] = {
+            "survivor_mesh": list(small.devices.shape),
+            "survivor_compress_collectives": s_cost.collective_counts,
+            "survivor_compress_all_gathers": s_ag,
+            "resize_cycles": cluster_resize_cycle_equivalence(
+                n_pods=2 * args.clusters, n_clusters=args.clusters),
+        }
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

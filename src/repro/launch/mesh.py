@@ -43,37 +43,126 @@ def pod_mesh_shape(ndev: int, n_pods: int) -> Tuple[int, int, int]:
     return (n_pods, per_pod // model, model)
 
 
-def make_pod_mesh(n_pods: int, *, max_devices: int = 0) -> Mesh:
-    """A (pod, data, model) mesh over the first available devices.
+def make_pod_mesh(n_pods: int, *, n_clusters: int = 1,
+                  max_devices: int = 0) -> Mesh:
+    """A (pod, data, model) mesh — or, with ``n_clusters > 1``, the
+    two-tier (cluster, pod, data, model) mesh — over the first available
+    devices.
 
     Unlike ``jax.make_mesh`` this takes a device *subset*, so an elastic
     run can stand up a smaller mesh than the full fleet (the survivors of
     a pod loss).  ``max_devices`` caps the device count (0 = all).
+
+    ``n_pods`` is always the TOTAL pod count; with clusters it must split
+    evenly (``n_pods % n_clusters == 0``) and the leading "cluster" axis
+    is the slow tier (DESIGN.md §10): devices are laid out cluster-major,
+    so cluster ``c`` owns the contiguous id block
+    ``[c*ndev/C, (c+1)*ndev/C)`` — which is what lets the analysis tier
+    classifier split pod-crossing from cluster-crossing collectives by
+    device-id divisor alone.
     """
     devs = jax.devices()
     if max_devices:
         devs = devs[:max_devices]
-    shape = pod_mesh_shape(len(devs), n_pods)
-    n = shape[0] * shape[1] * shape[2]
+    if n_clusters <= 1:
+        shape = pod_mesh_shape(len(devs), n_pods)
+        n = shape[0] * shape[1] * shape[2]
+        return Mesh(np.asarray(devs[:n], dtype=object).reshape(shape),
+                    ("pod", "data", "model"))
+    assert n_pods % n_clusters == 0, (
+        f"{n_pods} pods do not split into {n_clusters} equal clusters")
+    shape = cluster_mesh_shape(len(devs), n_clusters, n_pods // n_clusters)
+    n = int(np.prod(shape))
     return Mesh(np.asarray(devs[:n], dtype=object).reshape(shape),
-                ("pod", "data", "model"))
+                ("cluster", "pod", "data", "model"))
 
 
-def shrink_mesh(mesh: Mesh, keep_pods: Sequence[int]) -> Mesh:
+def cluster_mesh_shape(ndev: int, n_clusters: int,
+                       pods_per_cluster: int) -> Tuple[int, int, int, int]:
+    """(cluster, pod, data, model) shape: the device fleet splits evenly
+    into ``n_clusters`` contiguous blocks, each hosting its own
+    ``pod_mesh_shape`` grid.  8 devices, 2 clusters, 2 pods/cluster ->
+    (2, 2, 2, 1)."""
+    per_cluster = ndev // n_clusters
+    assert per_cluster >= pods_per_cluster >= 1, (
+        f"{ndev} devices cannot host {n_clusters} clusters of "
+        f"{pods_per_cluster} pods")
+    return (n_clusters,) + pod_mesh_shape(per_cluster, pods_per_cluster)
+
+
+def flatten_cluster_mesh(mesh: Mesh) -> Mesh:
+    """Merge the (cluster, pod) tiers into one flat "pod" axis.
+
+    Devices are kept verbatim in cluster-major order — flat pod row
+    ``c * pods_per_cluster + p`` is exactly cluster ``c``'s pod ``p`` —
+    so no buffer moves and the flat round's row order matches the
+    two-tier round's ``(C, ppc)`` reshape.  A mesh already flat passes
+    through unchanged.
+    """
+    if mesh.axis_names[0] != "cluster":
+        return mesh
+    d = mesh.devices
+    return Mesh(d.reshape((d.shape[0] * d.shape[1],) + d.shape[2:]),
+                mesh.axis_names[1:])
+
+
+def regroup_mesh(mesh: Mesh, n_clusters: int) -> Mesh:
+    """Inverse of :func:`flatten_cluster_mesh`: reshape a flat
+    (pod, data, model) mesh into (cluster, pod, data, model).
+
+    Requires the pod count to split evenly; rows are grouped
+    cluster-major (pods ``[c*ppc, (c+1)*ppc)`` form cluster ``c``), so a
+    flat mesh produced by a per-cluster shrink + end-append grow round
+    trip regains exactly its original device layout.
+    """
+    if n_clusters <= 1:
+        return mesh
+    assert mesh.axis_names[0] == "pod", mesh.axis_names
+    n_pods = mesh.devices.shape[0]
+    assert n_pods % n_clusters == 0, (
+        f"{n_pods} pods do not regroup into {n_clusters} clusters")
+    d = mesh.devices
+    return Mesh(d.reshape((n_clusters, n_pods // n_clusters) + d.shape[1:]),
+                ("cluster",) + mesh.axis_names)
+
+
+def shrink_mesh(mesh: Mesh, keep_pods: Sequence[int], *,
+                cluster: Optional[int] = None) -> Mesh:
     """The survivors' mesh: same per-pod (data, model) grid, fewer pods.
 
     ``keep_pods`` indexes the leading "pod" axis of ``mesh.devices``; the
     selected pods' devices are reused verbatim so no live buffers have to
     leave their device — only the dead pod's rows are dropped.
+
+    On a two-tier (cluster, pod, data, model) mesh, pass ``cluster=c``
+    and ``keep_pods`` indexes pods *within* cluster ``c`` — the death
+    resizes only its own cluster.  Because one short cluster breaks the
+    rectangular (cluster, pod) grid, the result is the **flattened**
+    (pod, data, model) mesh in cluster-major order with only cluster
+    ``c``'s dead rows removed: every other cluster's device assignment
+    is untouched, and the round degrades to the flat single-tier merge
+    until a grow rebalances the grid (:func:`regroup_mesh` restores it).
     """
-    assert mesh.axis_names[0] == "pod", mesh.axis_names
     keep = list(keep_pods)
     assert keep, "cannot shrink a mesh to zero pods"
+    if mesh.axis_names[0] == "cluster":
+        assert cluster is not None, (
+            "shrinking a cluster mesh needs cluster=<idx> (keep_pods "
+            "indexes pods within that cluster)")
+        n_c, ppc = mesh.devices.shape[:2]
+        assert 0 <= cluster < n_c, (cluster, n_c)
+        flat_keep = [c * ppc + p
+                     for c in range(n_c)
+                     for p in (keep if c == cluster else range(ppc))]
+        return shrink_mesh(flatten_cluster_mesh(mesh), flat_keep)
+    assert mesh.axis_names[0] == "pod", mesh.axis_names
+    assert cluster is None, "cluster= only applies to a cluster mesh"
     return Mesh(mesh.devices[np.asarray(keep)], mesh.axis_names)
 
 
 def grow_mesh(mesh: Mesh, n_new: int = 1, *,
-              new_devices: Optional[Sequence] = None) -> Mesh:
+              new_devices: Optional[Sequence] = None,
+              n_clusters: Optional[int] = None) -> Mesh:
     """The regrown mesh: same per-pod (data, model) grid, more pods.
 
     Inverse of ``shrink_mesh``: ``n_new`` pod rows are appended to the
@@ -82,7 +171,19 @@ def grow_mesh(mesh: Mesh, n_new: int = 1, *,
     — which after a shrink are exactly the dropped pod's devices, so a
     rejoining pod gets its own hardware back and no surviving pod's
     buffers have to move.  Pass ``new_devices`` to pin the rows
-    explicitly (a genuinely new pod's devices)."""
+    explicitly (a genuinely new pod's devices).
+
+    ``n_clusters`` restores the two-tier grid after a per-cluster shrink:
+    once the append rebalances the pod count, the flat mesh is regrouped
+    into (cluster, pod, data, model) via :func:`regroup_mesh`.  The
+    appended rows land at the END of the flat cluster-major order, so
+    this round-trips exactly when the dead pod was the last row of the
+    last cluster (the convention the elastic equivalence harnesses use);
+    any other death site still grows fine flat, but the caller then owns
+    the row->cluster permutation.
+    """
+    if mesh.axis_names[0] == "cluster":
+        mesh = flatten_cluster_mesh(mesh)
     assert mesh.axis_names[0] == "pod", mesh.axis_names
     assert n_new >= 1, n_new
     per_pod_shape = mesh.devices.shape[1:]
@@ -98,8 +199,11 @@ def grow_mesh(mesh: Mesh, n_new: int = 1, *,
             f"have {len(pool)}")
     rows = np.asarray(pool[:need], dtype=object).reshape(
         (n_new,) + per_pod_shape)
-    return Mesh(np.concatenate([mesh.devices, rows], axis=0),
-                mesh.axis_names)
+    grown = Mesh(np.concatenate([mesh.devices, rows], axis=0),
+                 mesh.axis_names)
+    if n_clusters is not None and n_clusters > 1:
+        return regroup_mesh(grown, n_clusters)
+    return grown
 
 
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
@@ -128,6 +232,8 @@ def arch_rules(cfg: ModelConfig, mesh: Optional[Mesh], parallel: ParallelConfig,
     tp = mesh_axis_size(mesh, "model") if mesh is not None else 16
     dp = mesh_axis_size(mesh, "data") if mesh is not None else 16
     pods = mesh_axis_size(mesh, "pod") if (mesh is not None and multi_pod) else 1
+    clusters = (mesh_axis_size(mesh, "cluster")
+                if (mesh is not None and multi_pod) else 1)
 
     def div(n: int) -> bool:
         return n > 0 and n % tp == 0
@@ -157,12 +263,17 @@ def arch_rules(cfg: ModelConfig, mesh: Optional[Mesh], parallel: ParallelConfig,
             extra["expert"] = None
             extra["expert_ff"] = "model" if div(cfg.moe.expert_ff) else None
 
-    # batch sharding: drop mesh axes that don't divide the global batch
+    # batch sharding: drop mesh axes that don't divide the global batch;
+    # the replica tiers claim first (cluster outermost, then pod), data last
     batch_axes = []
-    if multi_pod and pods > 1 and batch % pods == 0:
+    if multi_pod and clusters > 1 and batch % clusters == 0:
+        batch_axes.append("cluster")
+    rep = clusters if "cluster" in batch_axes else 1
+    if multi_pod and pods > 1 and (batch // rep) % pods == 0:
         batch_axes.append("pod")
-    eff = batch // (pods if "pod" in batch_axes else 1)
-    if batch % ((pods if "pod" in batch_axes else 1) * dp) == 0 and eff >= dp:
+        rep *= pods
+    eff = batch // rep
+    if batch % (rep * dp) == 0 and eff >= dp:
         batch_axes.append("data")
     extra["batch"] = tuple(batch_axes) if batch_axes else None
     extra["moe_group"] = extra["batch"]

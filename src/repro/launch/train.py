@@ -17,6 +17,9 @@ on a real pod the same functions jit under the production mesh.
 Usage:
     python -m repro.launch.train --preset lm100m --steps 300
     python -m repro.launch.train --preset lm100m --hermes --pods 4 --steps 300
+    python -m repro.launch.train --preset lm100m --hermes --pods 4 \
+        --clusters 2 --steps 300   # two-tier: intra-cluster merge, one
+                                   # packed payload per cluster crosses
 """
 from __future__ import annotations
 
@@ -40,7 +43,8 @@ from repro.configs import get_smoke_config
 from repro.checkpoint import Checkpointer
 from repro.data.synthetic import make_lm_dataset
 from repro.dist.hermes_sync import (
-    hermes_commit, hermes_dispatch, hermes_pod_state, hermes_round,
+    hermes_cluster_commit, hermes_cluster_dispatch, hermes_cluster_round,
+    hermes_pod_state,
 )
 from repro.models import init_lm, lm_loss
 from repro.optim import make_optimizer
@@ -70,15 +74,22 @@ def make_async_round_jits(hcfg: HermesConfig, mesh=None):
     late merge reads them.  Module-level so the donation contract is one
     definition shared by ``train_hermes``, the static analyzer
     (``launch/analyze.py``), and the pinned donation test.
+
+    Routes through the two-tier entry points (DESIGN.md §10): with
+    ``hcfg.n_clusters > 1`` the dispatch gathers intra-cluster and ships
+    only the re-encoded per-cluster partials across the cluster axis;
+    at one cluster both delegate verbatim to ``hermes_dispatch`` /
+    ``hermes_commit``, so the flat donation/aliasing contract is
+    unchanged.
     """
     commit_jit = jax.jit(
-        lambda pod_params, pending, w_global: hermes_commit(
+        lambda pod_params, pending, w_global: hermes_cluster_commit(
             pod_params, pending, w_global, cfg=hcfg, mesh=mesh),
         donate_argnums=(0, 1))
     dispatch_jit = jax.jit(
         lambda pod_params, gup, pod_losses, w_global, L, error, rng:
-        hermes_dispatch(pod_params, gup, pod_losses, w_global, L,
-                        hcfg, error=error, rng=rng, mesh=mesh))
+        hermes_cluster_dispatch(pod_params, gup, pod_losses, w_global, L,
+                                hcfg, error=error, rng=rng, mesh=mesh))
     return dispatch_jit, commit_jit
 
 
@@ -168,8 +179,9 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                  seed: int = 0, mesh=None) -> Dict:
     """Level-B Hermes: pod-stacked local training + gated merges.
 
-    ``mesh`` (a ``(pod, data, model)`` ``jax.sharding.Mesh``, optional)
-    is threaded into every ``hermes_round``: with a mesh the merge ships
+    ``mesh`` (a ``(pod, data, model)`` — or, with ``hcfg.n_clusters > 1``,
+    a ``(cluster, pod, data, model)`` — ``jax.sharding.Mesh``, optional)
+    is threaded into every round: with a mesh the merge ships
     the *encoded* push payloads explicitly across the pod axis and merges
     locally (``dist.hermes_sync.hermes_merge``); ``mesh=None`` runs the
     same math unplaced (single-host demo default) — bit-identical, by the
@@ -285,9 +297,9 @@ def train_hermes(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                 history_dev.append((i + 1, jnp.mean(pod_losses),
                                     jnp.sum(dp["gates"])))
             else:
-                out = hermes_round(pod_params, gup, pod_losses, w_global,
-                                   L_global, hcfg, error=error,
-                                   rng=rng_i, mesh=mesh)
+                out = hermes_cluster_round(pod_params, gup, pod_losses,
+                                           w_global, L_global, cfg=hcfg,
+                                           error=error, rng=rng_i, mesh=mesh)
                 pod_params, w_global = out["pod_params"], out["w_global"]
                 gup, error = out["gup"], out["error"]
                 L_global = eval_if_push(out["any_push"], w_global, L_global)
@@ -339,6 +351,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--hermes", action="store_true")
     ap.add_argument("--pods", type=int, default=4)
+    ap.add_argument("--clusters", type=int, default=1,
+                    help="two-tier Hermes (DESIGN.md §10): group the pods "
+                         "into N latency clusters; the gated merge runs "
+                         "intra-cluster and only each cluster's merged, "
+                         "re-encoded payload crosses the slow tier "
+                         "(--pods must divide evenly; 1 = flat round)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--alpha", type=float, default=-1.3)
     ap.add_argument("--beta", type=float, default=0.1)
@@ -360,8 +378,12 @@ def main() -> None:
         kw = {} if args.compression is None else {
             "compression": args.compression}
         hcfg = HermesConfig(alpha=args.alpha, beta=args.beta, lam=args.lam,
-                            eta=1.0, async_rounds=args.async_rounds, **kw)
+                            eta=1.0, async_rounds=args.async_rounds,
+                            n_clusters=args.clusters, **kw)
         hcfg.validate()
+        if args.clusters > 1 and args.pods % args.clusters:
+            ap.error(f"--pods {args.pods} must split evenly into "
+                     f"--clusters {args.clusters}")
         out = train_hermes(cfg, steps=args.steps, batch=args.batch,
                            seq=args.seq, pods=args.pods, opt_cfg=opt,
                            hcfg=hcfg, ckpt_dir=args.ckpt)

@@ -1,4 +1,4 @@
-from repro.roofline.hlo_parse import parse_hlo_cost, HloCost
+from repro.analysis.hlo_parse import parse_hlo_cost, HloCost
 from repro.roofline.analysis import roofline_terms, HW_V5E
 
 __all__ = ["parse_hlo_cost", "HloCost", "roofline_terms", "HW_V5E"]

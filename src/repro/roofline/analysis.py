@@ -5,7 +5,7 @@
     collective term = collective_bytes / link_bw         (per chip)
 
 All three numerators come from the per-device partitioned HLO via
-:mod:`repro.roofline.hlo_parse` (with while-loop trip multiplication).
+:mod:`repro.analysis.hlo_parse` (with while-loop trip multiplication).
 Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
 ICI (brief-specified).
 """
@@ -16,7 +16,7 @@ import json
 import os
 from typing import Dict, Optional
 
-from repro.roofline.hlo_parse import HloCost, parse_hlo_cost
+from repro.analysis.hlo_parse import HloCost, parse_hlo_cost
 
 
 @dataclasses.dataclass(frozen=True)

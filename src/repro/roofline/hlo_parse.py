@@ -3,9 +3,18 @@
 The parser became the core of the static analyzer (``repro.analysis``,
 DESIGN.md §9) so the roofline reports and the invariant rules share one
 implementation.  Import from ``repro.analysis.hlo_parse`` in new code;
-this module re-exports the full public surface for existing callers.
+this module re-exports the full public surface for existing callers and
+warns: in-repo callers have all migrated, and the shim will be removed
+once external users have too.
 """
-from repro.analysis.hlo_parse import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.roofline.hlo_parse is a compatibility shim; import from "
+    "repro.analysis.hlo_parse instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.analysis.hlo_parse import (  # noqa: E402,F401
     COLLECTIVES,
     DTYPE_BYTES,
     HloCost,

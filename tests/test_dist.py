@@ -14,7 +14,7 @@ from repro.dist.wire import (
     resolve_kernel_dispatch,
 )
 from repro.launch.mesh import arch_rules
-from repro.roofline.hlo_parse import parse_hlo_cost, shape_bytes
+from repro.analysis.hlo_parse import parse_hlo_cost, shape_bytes
 
 
 def test_axis_rules_dedup():
