@@ -2,13 +2,13 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test collect kernel-smoke quickstart bench-smoke elastic-smoke \
-	async-smoke cluster-smoke lint lint-hlo
+	async-smoke cluster-smoke sim-smoke lint lint-hlo
 
 # tier-1 verify (ROADMAP.md); the lint gates, the collect gate, the
 # sub-byte wire kernel smoke, the pipelined-round smoke, and the two-tier
 # cluster smoke run first so import/invariant/layout/billing/overlap/
 # topology drift fails before the suite
-test: lint lint-hlo collect kernel-smoke async-smoke cluster-smoke
+test: lint lint-hlo collect kernel-smoke async-smoke cluster-smoke sim-smoke
 	python -m pytest -x -q
 
 # Source lint: ruff (ruff.toml) when installed; otherwise the no-deps
@@ -95,6 +95,17 @@ elastic-smoke:
 	    --out results/dryrun_opt/hermes_elastic_smoke.json
 	REPRO_DRYRUN_DEVICES=8 python -m repro.launch.hermes_dryrun --rejoin-pod \
 	    --out results/dryrun_opt/hermes_rejoin_smoke.json
+
+# Fleet-scale engine gate (DESIGN.md §11): the batch/surrogate engine's
+# prate x cluster x wire sweep at {100, 1k} workers with the full churn
+# trace, asserting admission monotonicity (lower prate => fewer PS
+# pushes and fewer wire bytes), the per-cell wall-clock bound, and that
+# the clustered slow tier never ships more than the flat push volume.
+# The committed reference sweep (with the 10k tier) is
+# BENCH_sim_scale.json at the repo root.
+sim-smoke:
+	python benchmarks/sim_scale.py --fast \
+	    --out results/bench/sim_scale_smoke.json
 
 # Two-tier topology gate (DESIGN.md §10): lower the cluster round on a
 # (2, 2, 2, 1) mesh and assert, per wire format, that the only

@@ -292,6 +292,25 @@ class HermesConfig:
     # ``core.allocator.should_readmit`` admits only when the Eq.-3 speedup
     # from one more member over the expected remaining rounds exceeds it.
     rejoin_cost_rounds: float = 2.0
+    # participation-rate admission (DESIGN.md §11): on top of the z-score
+    # gate, at most ``ceil`` — actually ``max(1, floor(participation_rate
+    # * n_open))`` — of the gate-OPEN members actually ship their push in
+    # a given round; the rest are deferred.  Deferral is safe because the
+    # push is the w0-anchored gradient-sum (Level A) / the w_global-anchored
+    # delta with error feedback (Level B): a deferred pod's progress stays
+    # in its local replica + residual and ships whole on its next admitted
+    # push — admission changes *when* bytes move, never what the wire
+    # eventually carries.  ``participation_rate=1.0`` is a static no-op:
+    # the admission code is not even traced, so the lowering is
+    # bit-identical to the plain gate by construction.
+    participation_rate: float = 1.0
+    # "topk": deterministic — keep the open pods with the largest merge
+    # weight w2 = 1/loss (ties broken by pod index), so the budget spends
+    # on the pushes Algorithm 2 weights most.  "prob": i.i.d. Bernoulli
+    # thinning of the open gates (needs an rng at the round call sites;
+    # the Level-A event engine uses this mode, where no cohort exists to
+    # rank).
+    admission: str = "topk"
     # hierarchical topology (DESIGN.md §10): pods are grouped into
     # ``n_clusters`` latency clusters (k-means over the allocator's
     # observed iteration+transfer times).  The gated loss-weighted merge
@@ -312,6 +331,8 @@ class HermesConfig:
         assert self.failure_timeout_factor > 0.0, self.failure_timeout_factor
         assert self.min_live_pods >= 1, self.min_live_pods
         assert self.rejoin_cost_rounds >= 0.0, self.rejoin_cost_rounds
+        assert 0.0 < self.participation_rate <= 1.0, self.participation_rate
+        assert self.admission in ("topk", "prob"), self.admission
         assert self.n_clusters >= 1, self.n_clusters
 
 

@@ -37,6 +37,30 @@ def quartiles(times: Sequence[float]) -> Tuple[float, float, float]:
     return float(q1), float(q2), float(q3)
 
 
+def detect_outliers_arr(vals: np.ndarray, k: float = 1.5) -> np.ndarray:
+    """Array core of :func:`detect_outliers`: bool outlier mask over a
+    (n,) vector of observed times.  One ``np.percentile`` + vectorized
+    fence comparisons — no Python loop over workers, so the 10k-fleet
+    sweep runs in microseconds (the satellite-3 requirement)."""
+    vals = np.asarray(vals, np.float64)
+    n = vals.shape[0]
+    if n < 2:
+        return np.zeros((n,), bool)
+    r = 1.0 + k
+    if n == 2:
+        lo, hi = float(vals.min()), float(vals.max())
+        flag = hi > r * max(lo, 1e-12)
+        return np.full((2,), flag, bool)
+    if n < 4:
+        _, med, _ = quartiles(vals)
+        lo, hi = med / r, med * r
+    else:
+        q1, _, q3 = quartiles(vals)
+        iqr = q3 - q1
+        lo, hi = q1 - k * iqr, q3 + k * iqr
+    return (vals < lo) | (vals > hi)
+
+
 def detect_outliers(times: Dict[str, float], k: float = 1.5) -> List[str]:
     """Workers whose time falls outside [Q1 - k*IQR, Q3 + k*IQR].
 
@@ -49,22 +73,13 @@ def detect_outliers(times: Dict[str, float], k: float = 1.5) -> List[str]:
     the pair directly — the median of two is their midpoint, so no ratio
     fence around it can ever catch the straggler — and when they diverge
     by more than ``1 + k`` *both* are flagged, resizing both toward the
-    midpoint target (the slow one sheds work, the fast one absorbs it)."""
-    if len(times) < 2:
-        return []
-    vals = list(times.values())
-    r = 1.0 + k
-    if len(times) == 2:
-        lo, hi = sorted(vals)
-        return list(times) if hi > r * max(lo, 1e-12) else []
-    if len(times) < 4:
-        _, med, _ = quartiles(vals)
-        lo, hi = med / r, med * r
-    else:
-        q1, _, q3 = quartiles(vals)
-        iqr = q3 - q1
-        lo, hi = q1 - k * iqr, q3 + k * iqr
-    return [w for w, t in times.items() if t < lo or t > hi]
+    midpoint target (the slow one sheds work, the fast one absorbs it).
+
+    Thin dict wrapper over :func:`detect_outliers_arr` (same fences, same
+    float arithmetic — ``np.percentile`` is order-invariant)."""
+    mask = detect_outliers_arr(np.asarray(list(times.values()), np.float64),
+                               k)
+    return [w for w, m in zip(times, mask) if m]
 
 
 def estimate_k(t_train: float, epochs: int, dss: int, mbs: int) -> float:
@@ -184,6 +199,127 @@ def reallocate(times: Dict[str, float], allocs: Dict[str, Allocation],
 
 
 # ---------------------------------------------------------------------------
+# Vectorized sweep + participation admission (DESIGN.md §11, the 10k engine)
+# ---------------------------------------------------------------------------
+
+
+def allocate_batch(k_arr: np.ndarray, t_target: float, *, epochs: int = 1,
+                   dss_domain: Tuple[int, int] = (16, 60000),
+                   mbs_choices: Sequence[int] = (2, 4, 8, 16, 32, 64, 128,
+                                                 256),
+                   mem_limit_arr: np.ndarray = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Dual binary search for a whole outlier *batch* at once.
+
+    Vectorized form of :func:`dual_binary_search`: for each of the (m,)
+    per-worker constants ``k_arr`` pick the (DSS, MBS) whose predicted
+    time ``k * E * (DSS // MBS)`` lands closest to ``t_target``.  The
+    inner DSS search runs as ~17 lockstep binary-search iterations over
+    the whole batch; the outer loop covers every MBS choice (8 of them),
+    so the sweep costs O(|choices| * lg(dss_hi)) vector ops for ANY fleet
+    size — no Python loop over workers.  Probing all choices (instead of
+    the scalar path's heuristic midpoint walk) finds the true optimum of
+    the same objective with the same larger-DSS tie-break, so batch
+    allocations are never worse fits than the scalar path's.
+
+    Returns ``(dss, mbs)`` int64 arrays of shape (m,).
+    """
+    k_arr = np.asarray(k_arr, np.float64)
+    m = k_arr.shape[0]
+    dss_lo, dss_hi = int(dss_domain[0]), int(dss_domain[1])
+    if mem_limit_arr is None:
+        mem_limit_arr = np.full((m,), 10 ** 9, np.int64)
+    hi_arr = np.minimum(dss_hi, np.asarray(mem_limit_arr, np.int64))
+    E = max(1, int(epochs))
+    best_err = np.full((m,), np.inf)
+    best_dss = np.full((m,), dss_lo, np.int64)
+    best_mbs = np.full((m,), int(sorted(mbs_choices)[0]), np.int64)
+    for mbs in sorted(int(c) for c in mbs_choices):
+        # largest DSS with predicted time <= t_target (per worker)
+        lo = np.full((m,), dss_lo, np.int64)
+        hi = hi_arr.copy()
+        found = np.full((m,), dss_lo, np.int64)
+        while True:
+            open_ = lo <= hi
+            if not open_.any():
+                break
+            mid = (lo + hi) // 2
+            t_mid = k_arr * E * np.maximum(1, mid // mbs)
+            ok = open_ & (t_mid <= t_target)
+            found = np.where(ok, mid, found)
+            lo = np.where(ok, mid + 1, lo)
+            hi = np.where(open_ & ~ok, mid - 1, hi)
+        dss = np.maximum(found, mbs)  # at least one mini-batch
+        t = k_arr * E * np.maximum(1, dss // mbs)
+        err = np.abs(t - t_target)
+        # prefer smaller error; tie-break on larger dss (same rule as
+        # dual_binary_search.probe)
+        better = (err < best_err - 1e-9) | \
+            ((np.abs(err - best_err) <= 1e-9) & (dss > best_dss))
+        best_err = np.where(better, err, best_err)
+        best_dss = np.where(better, dss, best_dss)
+        best_mbs = np.where(better, mbs, best_mbs)
+    return best_dss, best_mbs
+
+
+def reallocate_arr(times: np.ndarray, dss: np.ndarray, mbs: np.ndarray,
+                   cfg: HermesConfig, *, epochs: int = 1,
+                   dss_domain: Tuple[int, int] = (16, 60000),
+                   mem_limit_arr: np.ndarray = None
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Array-native :func:`reallocate`: one allocator round over (n,)
+    observation/allocation vectors.  Returns ``(outlier_mask, new_dss,
+    new_mbs)`` where the new allocations are only meaningful where the
+    mask is set.  Used by the vectorized engine's sweep at fleet scale."""
+    n = times.shape[0]
+    mask = detect_outliers_arr(times, cfg.iqr_k)
+    new_dss = np.asarray(dss, np.int64).copy()
+    new_mbs = np.asarray(mbs, np.int64).copy()
+    if not mask.any():
+        return mask, new_dss, new_mbs
+    _, med, _ = quartiles(times)
+    target = med if cfg.target == "median" else float(np.mean(times))
+    steps = np.maximum(1, dss[mask] // np.maximum(1, mbs[mask])) \
+        * max(1, epochs)
+    k_arr = times[mask] / steps
+    lim = None if mem_limit_arr is None else mem_limit_arr[mask]
+    d, m = allocate_batch(k_arr, target, epochs=epochs,
+                          dss_domain=dss_domain,
+                          mbs_choices=cfg.mbs_choices, mem_limit_arr=lim)
+    new_dss[mask] = d
+    new_mbs[mask] = m
+    return mask, new_dss, new_mbs
+
+
+def admission_mask(open_mask: np.ndarray, weights: np.ndarray,
+                   prate: float, mode: str = "topk",
+                   rng: np.random.Generator = None) -> np.ndarray:
+    """Host-side participation admission over a push cohort (the numpy
+    twin of ``dist.hermes_sync.admit_gates``; the vectorized engine uses
+    it per macro-step).  Keeps at most ``max(1, floor(prate * n_open))``
+    of the open entries: ``"topk"`` by descending ``weights`` (the
+    Algorithm-2 merge weight 1/loss; stable index tie-break), ``"prob"``
+    by Bernoulli(prate) thinning.  ``prate >= 1`` returns the mask
+    unchanged."""
+    open_mask = np.asarray(open_mask, bool)
+    if prate >= 1.0:
+        return open_mask
+    n_open = int(open_mask.sum())
+    if n_open == 0:
+        return open_mask
+    if mode == "prob":
+        if rng is None:
+            raise ValueError("admission 'prob' needs an rng")
+        return open_mask & (rng.random(open_mask.shape) < prate)
+    k = max(1, int(np.floor(prate * n_open)))
+    w = np.where(open_mask, np.asarray(weights, np.float64), -np.inf)
+    order = np.argsort(-w, kind="stable")
+    out = np.zeros_like(open_mask)
+    out[order[:k]] = True
+    return out & open_mask
+
+
+# ---------------------------------------------------------------------------
 # Latency clustering (DESIGN.md §10, the hierarchical topology)
 # ---------------------------------------------------------------------------
 
@@ -219,11 +355,22 @@ def kmeans_1d(times: Dict[str, float], n_clusters: int, *,
     items = sorted(times.items(), key=lambda kv: (kv[1], kv[0]))
     names = [k for k, _ in items]
     vals = np.asarray([v for _, v in items], np.float64)
+    labels = _kmeans_sorted_labels(vals, n_clusters, iters=iters)
+    return {k: int(labels[i]) for i, k in enumerate(names)}
+
+
+def _kmeans_sorted_labels(vals: np.ndarray, n_clusters: int, *,
+                          iters: int = 32) -> np.ndarray:
+    """Label core of :func:`kmeans_1d` over an already-sorted (n,) value
+    vector.  Fully vectorized: quantile init, Lloyd refinement via
+    ``np.bincount`` centroid means (no Python loop over workers or
+    clusters), centroid-rank relabel — identical arithmetic to the dict
+    path, which is a thin wrapper around this."""
     n = len(vals)
     if n_clusters == 1:
-        return {k: 0 for k in names}
+        return np.zeros((n,), np.int64)
     if n <= n_clusters:
-        return {k: i for i, k in enumerate(names)}
+        return np.arange(n, dtype=np.int64)
     # quantile-spread init over the sorted values (deterministic)
     q = (np.arange(n_clusters) + 0.5) / n_clusters
     cent = np.quantile(vals, q)
@@ -235,16 +382,39 @@ def kmeans_1d(times: Dict[str, float], n_clusters: int, *,
         if it > 0 and np.array_equal(new_assign, assign):
             break
         assign = new_assign
-        for c in range(n_clusters):
-            sel = vals[assign == c]
-            if sel.size:
-                cent[c] = float(np.mean(sel))
+        # per-cluster means in one bincount pass; an empty cluster keeps
+        # its stale centroid (sum 0 / count 0 guarded), exactly like the
+        # per-cluster loop this replaced
+        cnt = np.bincount(assign, minlength=n_clusters)
+        s = np.bincount(assign, weights=vals, minlength=n_clusters)
+        nonempty = cnt > 0
+        cent = np.where(nonempty, s / np.maximum(cnt, 1), cent)
     # re-label by ascending centroid; empty clusters sort last by their
     # (stale) centroid but receive no members, so ids stay in range
     order = np.argsort(cent, kind="stable")
     relabel = np.empty_like(order)
     relabel[order] = np.arange(n_clusters)
-    return {k: int(relabel[assign[i]]) for i, k in enumerate(names)}
+    return relabel[assign]
+
+
+def kmeans_1d_arr(vals: np.ndarray, n_clusters: int, *,
+                  iters: int = 32) -> np.ndarray:
+    """Array-native :func:`kmeans_1d`: (n,) observed times in, (n,)
+    cluster ids out (aligned to the input order).  The deterministic
+    tie-break is by input *index* where the dict path breaks ties by
+    name — same stability property, no dict or sort-by-name in the 10k
+    sweep path."""
+    assert n_clusters >= 1, n_clusters
+    vals = np.asarray(vals, np.float64)
+    n = vals.shape[0]
+    if n == 0:
+        return np.zeros((0,), np.int64)
+    order = np.lexsort((np.arange(n), vals))
+    labels_sorted = _kmeans_sorted_labels(vals[order], n_clusters,
+                                          iters=iters)
+    out = np.empty((n,), np.int64)
+    out[order] = labels_sorted
+    return out
 
 
 def cluster_sizes(assignment: Dict[str, int], n_clusters: int) -> list:

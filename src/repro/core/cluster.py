@@ -95,6 +95,55 @@ class CommModel:
         return self.latency + nbytes / self.bandwidth
 
 
+class MeterEvents:
+    """Lazy sequence view over a :class:`Meter`'s chunked event columns.
+
+    Behaves like the ``List[Tuple[Optional[float], str, str, float]]`` it
+    replaced — ``len``, integer/slice indexing, iteration, tuple
+    unpacking — but materializes one tuple at a time from the numpy
+    columns, so holding a ``RunResult`` for a 10k-worker x 1k-round run
+    costs four flat arrays instead of millions of tiny tuples."""
+
+    def __init__(self, meter: "Meter"):
+        self._m = meter
+
+    def __len__(self) -> int:
+        return self._m._n_events
+
+    def _at(self, i: int) -> Tuple[Optional[float], str, str, float]:
+        m = self._m
+        c, off = divmod(i, Meter._CHUNK)
+        if c < len(m._full_t):
+            t = m._full_t[c][off]
+            w = m._full_w[c][off]
+            k = m._full_k[c][off]
+            nb = m._full_nb[c][off]
+        else:
+            t, w, k = m._buf_t[off], m._buf_w[off], m._buf_k[off]
+            nb = m._buf_nb[off]
+        tf = float(t)
+        return (None if np.isnan(tf) else tf, m._worker_names[int(w)],
+                m._kind_names[int(k)], float(nb))
+
+    def __getitem__(self, i):
+        n = len(self)
+        if isinstance(i, slice):
+            return [self._at(j) for j in range(*i.indices(n))]
+        j = int(i)
+        if j < 0:
+            j += n
+        if not 0 <= j < n:
+            raise IndexError(i)
+        return self._at(j)
+
+    def __iter__(self):
+        for j in range(len(self)):
+            yield self._at(j)
+
+    def __repr__(self) -> str:
+        return f"MeterEvents(n={len(self)})"
+
+
 class Meter:
     """API-call / byte accounting (paper counts every PS contact).
 
@@ -102,26 +151,141 @@ class Meter:
     (``t`` is the simulated time the caller passes, or None for untimed
     contexts), so failure-path tests can assert that nothing is ever
     billed to a worker at or after its death time.
-    """
+
+    Events live in chunked numpy columns (timestamp, worker id, kind id,
+    bytes) behind the lazy :class:`MeterEvents` view, and the vectorized
+    engine appends whole cohorts at once via :meth:`call_batch` — per-call
+    Python tuples would dominate memory and time at 10k workers."""
+
+    _CHUNK = 1 << 16
 
     def __init__(self):
-        self.api_calls: Dict[str, int] = {}
         self.bytes: float = 0.0
         self.calls_by_kind: Dict[str, int] = {}
         self.bytes_by_kind: Dict[str, float] = {}
-        self.events: List[Tuple[Optional[float], str, str, float]] = []
+        self._worker_ids: Dict[str, int] = {}
+        self._worker_names: List[str] = []
+        self._worker_calls = np.zeros((0,), np.int64)
+        self._kind_ids: Dict[str, int] = {}
+        self._kind_names: List[str] = []
+        # full chunks (immutable once flushed) + the current write buffer
+        self._full_t: List[np.ndarray] = []
+        self._full_w: List[np.ndarray] = []
+        self._full_k: List[np.ndarray] = []
+        self._full_nb: List[np.ndarray] = []
+        self._buf_t = np.empty((self._CHUNK,), np.float64)
+        self._buf_w = np.empty((self._CHUNK,), np.int32)
+        self._buf_k = np.empty((self._CHUNK,), np.int32)
+        self._buf_nb = np.empty((self._CHUNK,), np.float64)
+        self._fill = 0
 
+    # -- id registries ------------------------------------------------------
+    def worker_id(self, worker: str) -> int:
+        wid = self._worker_ids.get(worker)
+        if wid is None:
+            wid = len(self._worker_names)
+            self._worker_ids[worker] = wid
+            self._worker_names.append(worker)
+            if wid >= self._worker_calls.shape[0]:
+                grown = np.zeros((max(16, 2 * (wid + 1)),), np.int64)
+                grown[:self._worker_calls.shape[0]] = self._worker_calls
+                self._worker_calls = grown
+        return wid
+
+    def worker_ids(self, workers) -> np.ndarray:
+        return np.asarray([self.worker_id(w) for w in workers], np.int32)
+
+    def _kind_id(self, kind: str) -> int:
+        kid = self._kind_ids.get(kind)
+        if kid is None:
+            kid = len(self._kind_names)
+            self._kind_ids[kind] = kid
+            self._kind_names.append(kind)
+        return kid
+
+    # -- event columns ------------------------------------------------------
+    @property
+    def _n_events(self) -> int:
+        return len(self._full_t) * self._CHUNK + self._fill
+
+    def _flush(self):
+        self._full_t.append(self._buf_t)
+        self._full_w.append(self._buf_w)
+        self._full_k.append(self._buf_k)
+        self._full_nb.append(self._buf_nb)
+        self._buf_t = np.empty((self._CHUNK,), np.float64)
+        self._buf_w = np.empty((self._CHUNK,), np.int32)
+        self._buf_k = np.empty((self._CHUNK,), np.int32)
+        self._buf_nb = np.empty((self._CHUNK,), np.float64)
+        self._fill = 0
+
+    def _append_cols(self, t: np.ndarray, wid: np.ndarray, kid: int,
+                     nb: np.ndarray):
+        m = t.shape[0]
+        pos = 0
+        while pos < m:
+            take = min(self._CHUNK - self._fill, m - pos)
+            s = slice(self._fill, self._fill + take)
+            self._buf_t[s] = t[pos:pos + take]
+            self._buf_w[s] = wid[pos:pos + take]
+            self._buf_k[s] = kid
+            self._buf_nb[s] = nb[pos:pos + take]
+            self._fill += take
+            pos += take
+            if self._fill == self._CHUNK:
+                self._flush()
+
+    # -- accounting ---------------------------------------------------------
     def call(self, worker: str, kind: str, nbytes: float = 0.0, n: int = 1,
              t: Optional[float] = None):
-        self.api_calls[worker] = self.api_calls.get(worker, 0) + n
+        wid = self.worker_id(worker)
+        self._worker_calls[wid] += n
         self.calls_by_kind[kind] = self.calls_by_kind.get(kind, 0) + n
         self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + nbytes
         self.bytes += nbytes
-        self.events.append((t, worker, kind, float(nbytes)))
+        kid = self._kind_id(kind)
+        self._buf_t[self._fill] = np.nan if t is None else float(t)
+        self._buf_w[self._fill] = wid
+        self._buf_k[self._fill] = kid
+        self._buf_nb[self._fill] = float(nbytes)
+        self._fill += 1
+        if self._fill == self._CHUNK:
+            self._flush()
+
+    def call_batch(self, wids: np.ndarray, kind: str, nbytes: np.ndarray,
+                   t: np.ndarray, n_per: int = 1):
+        """Bulk-record one event per entry of ``wids`` (worker ids from
+        :meth:`worker_ids`), all of the same ``kind``.  ``nbytes``/``t``
+        broadcast against ``wids``.  Aggregate counters and the event
+        columns update in O(batch) numpy ops."""
+        wids = np.asarray(wids, np.int32)
+        m = wids.shape[0]
+        if m == 0:
+            return
+        nb = np.broadcast_to(np.asarray(nbytes, np.float64), (m,))
+        tt = np.broadcast_to(np.asarray(t, np.float64), (m,))
+        np.add.at(self._worker_calls, wids, n_per)
+        self.calls_by_kind[kind] = (self.calls_by_kind.get(kind, 0)
+                                    + n_per * m)
+        tot = float(nb.sum())
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + tot
+        self.bytes += tot
+        self._append_cols(tt, wids, self._kind_id(kind), nb)
+
+    @property
+    def api_calls(self) -> Dict[str, int]:
+        """Per-worker PS-contact counts, materialized from the id-indexed
+        column (kept a dict for API compatibility)."""
+        return {name: int(self._worker_calls[i])
+                for i, name in enumerate(self._worker_names)}
+
+    @property
+    def events(self) -> MeterEvents:
+        return MeterEvents(self)
 
     @property
     def total_calls(self) -> int:
-        return sum(self.api_calls.values())
+        return int(self._worker_calls[:len(self._worker_names)].sum())
 
 
 # ---------------------------------------------------------------------------

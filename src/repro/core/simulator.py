@@ -228,7 +228,9 @@ def run_framework(framework: str, bundle: ModelBundle, *,
                   selsync_delta: float = 1.0,
                   alloc_every: float = 30.0,
                   failures: Optional[Dict[str, float]] = None,
-                  recoveries: Optional[Dict[str, float]] = None) -> RunResult:
+                  recoveries: Optional[Dict[str, float]] = None,
+                  engine: str = "auto",
+                  churn: Optional[Any] = None) -> RunResult:
     """``failures``: {worker_name: sim_time} — the node dies (stops
     responding) at that simulated time.  Asynchronous frameworks tolerate
     this natively (dead workers simply stop contributing); BSP excludes a
@@ -250,6 +252,34 @@ def run_framework(framework: str, bundle: ModelBundle, *,
     transfer; a denied rejoin leaves it excluded (one ``rejoin_denied``
     meter event, no bytes)."""
     hermes_cfg = hermes_cfg or HermesConfig()
+    if engine not in ("auto", "legacy", "vector"):
+        raise ValueError(f"unknown engine {engine!r}")
+    # Engine dispatch (DESIGN.md §11).  "legacy" = the per-worker loops
+    # below (the oracle); "vector" = the flat-array engine in
+    # core/engine.py; "auto" = legacy for real bundles (bit-identical by
+    # construction) and the batch/surrogate engine when the caller hands
+    # us a SurrogateBundle or a ChurnTrace — the only paths that need it.
+    from repro.core import engine as _engine  # deferred: engine imports us
+    if isinstance(bundle, _engine.SurrogateBundle) or churn is not None:
+        if engine == "legacy":
+            raise ValueError(
+                "churn traces / surrogate bundles need the vectorized "
+                "batch engine; drop engine='legacy'")
+        if not isinstance(bundle, _engine.SurrogateBundle):
+            raise ValueError(
+                "churn traces run on the batch engine: pass a "
+                "SurrogateBundle (real-bundle churn is the failures/"
+                "recoveries path)")
+        if failures or recoveries:
+            raise ValueError(
+                "the batch engine models churn via ChurnTrace, not "
+                "failures/recoveries")
+        stop = _StopCfg(target_acc, max_iterations, max_sim_time, max_wall,
+                        eval_every, patience)
+        return _engine.run_batch(framework, bundle, num_workers=num_workers,
+                                 hcfg=hermes_cfg, seed=seed,
+                                 init_alloc=init_alloc, stop=stop,
+                                 alloc_every=alloc_every, churn=churn)
     compression = hermes_cfg.compression if framework == "hermes" else "none"
     env = _Env(bundle, num_workers=num_workers,
                hermes_cfg=hermes_cfg if framework == "hermes" else None,
@@ -272,6 +302,14 @@ def run_framework(framework: str, bundle: ModelBundle, *,
         raise ValueError(
             "only hermes has a re-admission (grow) path; pass recoveries "
             "to hermes runs")
+    if engine == "vector":
+        if framework == "ebsp":
+            raise ValueError(
+                "ebsp has no vectorized port (it models the benchmark-"
+                "then-schedule baseline only); use engine='legacy'")
+        return _engine.run_exact(framework, env, stop, hermes_cfg,
+                                 ssp_s=ssp_s, selsync_delta=selsync_delta,
+                                 alloc_every=alloc_every)
     if framework == "bsp":
         return _run_bsp(env, stop)
     if framework == "asp":
@@ -859,6 +897,6 @@ def _result(name: str, env: _Env, sim_t: float, t0: float, acc_best: float,
         alloc_trace=alloc_trace,
         calls_by_kind=dict(env.meter.calls_by_kind),
         bytes_by_kind=dict(env.meter.bytes_by_kind),
-        meter_events=list(env.meter.events),
+        meter_events=env.meter.events,
         comm_stall=comm_stall,
     )

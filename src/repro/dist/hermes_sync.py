@@ -85,6 +85,57 @@ def _pod_mask(gates: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
     return gates.reshape(gates.shape + (1,) * (leaf.ndim - 1))
 
 
+def admit_gates(gates: jnp.ndarray, losses: jnp.ndarray, cfg: HermesConfig,
+                rng=None) -> jnp.ndarray:
+    """Participation-rate admission on top of the z-score gate (DESIGN.md
+    §11): keep at most ``max(1, floor(participation_rate * n_open))`` of
+    the OPEN gates; the rest are deferred to a later round.
+
+    At ``participation_rate >= 1.0`` this returns ``gates`` itself — no
+    ops are traced, so every round family lowers bit-identically to the
+    pre-admission gate by construction (the same static-delegation
+    pattern as the ``n_clusters=1`` cluster paths).
+
+    ``admission="topk"`` ranks the open pods by their Algorithm-2 merge
+    weight ``w2 = 1/loss`` (stable sort, index tie-break) so the budget
+    ships the pushes the merge weights most; ``"prob"`` thins the open
+    gates i.i.d. Bernoulli(prate) and needs ``rng`` (folded, so the
+    encode stream is untouched).  Both only ever *clear* gate bits:
+    admitted ⊆ open, a closed gate can never be admitted, and the wire
+    payload of a deferred pod is the same exact zeros as a closed one —
+    admission changes ``any_push`` frequency, never the wire-operand
+    multiset (``launch/analyze.py::check_admission``).  Error feedback /
+    local accumulation make the deferral lossless in the telescoped sum:
+    a deferred pod's delta stays anchored to its last refresh, so its
+    next admitted push carries everything the deferrals withheld.
+    """
+    prate = float(getattr(cfg, "participation_rate", 1.0))
+    if prate >= 1.0:
+        return gates
+    mode = getattr(cfg, "admission", "topk")
+    gates = gates.astype(bool)
+    n_open = jnp.sum(gates.astype(jnp.int32))
+    if mode == "prob":
+        if rng is None:
+            raise ValueError(
+                "admission='prob' with participation_rate < 1 needs an rng")
+        u = jax.random.uniform(jax.random.fold_in(rng, 0xAD317),
+                               gates.shape, jnp.float32)
+        return gates & (u < prate)
+    # topk by merge weight; closed gates rank below every open one (-inf)
+    w2 = jnp.where(gates,
+                   1.0 / jnp.maximum(losses.astype(jnp.float32), _EPS),
+                   -jnp.inf)
+    order = jnp.argsort(-w2, stable=True)
+    rank = jnp.zeros(gates.shape, jnp.int32).at[order].set(
+        jnp.arange(gates.shape[0], dtype=jnp.int32))
+    k = jnp.maximum(jnp.int32(1),
+                    jnp.floor(prate * n_open.astype(jnp.float32))
+                    .astype(jnp.int32))
+    k = jnp.where(n_open > 0, k, jnp.int32(0))
+    return gates & (rank < k)
+
+
 def _merge_leaf_jnp(g, pods, w1, w2, denom, any_push):
     """(w1*g + sum_i w2_i*pods_i)/denom, falling back to g on closed rounds.
 
@@ -389,6 +440,12 @@ def hermes_round(pod_params: Tree, gup_state: Tree, pod_losses: jnp.ndarray,
     gates = gates.astype(bool)
     if live is not None:
         gates = gates & live.astype(bool)
+    # participation budget AFTER the gate+live mask and BEFORE any_push /
+    # wire / merge / refresh: a deferred pod behaves exactly like a closed
+    # one downstream (the per-pod GUP bookkeeping above already advanced
+    # on the RAW gate decision — deferral is a transport policy, not a
+    # gate override).  At participation_rate=1.0 this is `gates` itself.
+    gates = admit_gates(gates, pod_losses, cfg, rng=rng)
     any_push = jnp.any(gates)
     err_in = error if cfg.error_feedback else None
     # hermes_merge tracks a residual for every non-"none" format (lossless
@@ -493,6 +550,10 @@ def hermes_dispatch(pod_params: Tree, gup_state: Tree,
     gates = gates.astype(bool)
     if live is not None:
         gates = gates & live.astype(bool)
+    # participation budget (see hermes_round / admit_gates): the pending
+    # buffer carries the ADMITTED gates, so the matching commit merges
+    # and refreshes exactly the pods whose payload actually shipped.
+    gates = admit_gates(gates, pod_losses, cfg, rng=rng)
     n_pods = int(gates.shape[0])
     any_push = jnp.any(gates)
     compressed = cfg.compression != "none"
@@ -1043,6 +1104,9 @@ def hermes_cluster_round(pod_params: Tree, gup_state: Tree,
     gates = gates.astype(bool)
     if live is not None:
         gates = gates & live.astype(bool)
+    # same admission point as the flat round (the C<=1 delegation above
+    # already applied it through hermes_round)
+    gates = admit_gates(gates, pod_losses, cfg, rng=rng)
     any_push = jnp.any(gates)
     err_in = error if cfg.error_feedback else None
     compressed = cfg.compression != "none"
@@ -1112,6 +1176,9 @@ def hermes_cluster_dispatch(pod_params: Tree, gup_state: Tree,
     gates = gates.astype(bool)
     if live is not None:
         gates = gates & live.astype(bool)
+    # same admission point as the flat dispatch (the C<=1 delegation
+    # above already applied it through hermes_dispatch)
+    gates = admit_gates(gates, pod_losses, cfg, rng=rng)
     n_pods = int(gates.shape[0])
     if cluster_sizes is not None:
         assert mesh is None, (

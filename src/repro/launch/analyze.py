@@ -224,6 +224,60 @@ def check_async_halves(mode: Optional[str] = None) -> List[Report]:
     return [rep_dispatch, rep_commit]
 
 
+def check_admission(mode: Optional[str] = None) -> List[Report]:
+    """Participation admission must not change the wire (DESIGN.md §11).
+
+    Lowers the round and the dispatch half with ``participation_rate``
+    0.5 under both admission policies against the UNCHANGED
+    ``wire_operand_specs`` placement rule: admission thins which open
+    gates ship — ``any_push`` frequency — but the cross-pod collective's
+    operand multiset (shapes, dtypes, billed bytes) is pinned to the
+    same registry entry as the ungated round.  A deferred pod's payload
+    rows are the same exact zeros as a closed pod's, so no new operand
+    may appear and none may grow."""
+    reports: List[Report] = []
+    mesh = make_pod_mesh(N_PODS)
+    _, wg = _toy()
+    losses = jax.ShapeDtypeStruct((N_PODS,), jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    for admission in ("topk", "prob"):
+        kw = {} if mode is None else {"compression": mode}
+        cfg = HermesConfig(alpha=-0.3, beta=0.1, lam=2, window=4,
+                           participation_rate=0.5, admission=admission,
+                           **kw)
+        lowered, fn, args = _lower_round(mesh, cfg, N_PODS)
+        reports.append(analyze(
+            lowered,
+            rules=[_placement_rule(mesh, wg, cfg.compression, N_PODS),
+                   RetraceGuard(scan_source=False)],
+            fn=fn, example_args=args,
+            label=f"hermes_round[{cfg.compression},prate=0.5,"
+                  f"{admission}]"))
+        pods, _ = _toy()
+        gup = hermes_pod_state(cfg, N_PODS)
+        pod_sh, gup_sh, rep, rep_tree = _round_shardings(mesh, pods, gup,
+                                                         wg)
+
+        def dispatch_fn(p, g, pl, w, cfg=cfg):
+            o = hermes_dispatch(p, g, pl, w, jnp.float32(1.0), cfg,
+                                rng=rng, mesh=mesh)
+            return o["pending"], o["error"], o["any_push"]
+
+        d_args = (_sds(pods), _sds(gup), losses, _sds(wg))
+        with mesh:
+            d_lowered = jax.jit(
+                dispatch_fn, in_shardings=(pod_sh, gup_sh, rep, rep_tree)
+            ).lower(*d_args)
+        reports.append(analyze(
+            d_lowered,
+            rules=[_placement_rule(mesh, wg, cfg.compression, N_PODS),
+                   RetraceGuard(scan_source=False)],
+            fn=dispatch_fn, example_args=d_args,
+            label=f"hermes_dispatch[{cfg.compression},prate=0.5,"
+                  f"{admission}]"))
+    return reports
+
+
 def check_elastic(mode: Optional[str] = None) -> List[Report]:
     """Post-resize rounds: shrink 4 -> 3, grow 3 -> 4, re-lower the round
     on the survivors' and the regrown mesh — the wire bill tracks the new
@@ -480,6 +534,7 @@ def main() -> None:
     reports: List[Report] = []
     reports += check_hermes_round(args.mode)
     reports += check_async_halves(args.mode)
+    reports += check_admission(args.mode)
     reports += check_elastic(args.mode)
     reports += check_train_step()
     reports += check_round_loop_source()

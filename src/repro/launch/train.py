@@ -368,6 +368,16 @@ def main() -> None:
                     help="pipeline the rounds: dispatch the packed payload "
                          "gather and keep training, merge it one round late "
                          "(staleness-1; DESIGN.md §8)")
+    ap.add_argument("--participation-rate", type=float, default=1.0,
+                    help="admission budget on top of the z-gate (DESIGN.md "
+                         "§11): at most max(1, floor(rate * n_open)) of the "
+                         "open gates ship per round, the rest defer behind "
+                         "error feedback; 1.0 = admission statically off "
+                         "(bit-identical lowering)")
+    ap.add_argument("--admission", default="topk", choices=("topk", "prob"),
+                    help="how the budget picks shippers: 'topk' by the "
+                         "Algorithm-2 merge weight 1/loss, 'prob' i.i.d. "
+                         "Bernoulli thinning")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--restore", action="store_true")
     args = ap.parse_args()
@@ -379,7 +389,9 @@ def main() -> None:
             "compression": args.compression}
         hcfg = HermesConfig(alpha=args.alpha, beta=args.beta, lam=args.lam,
                             eta=1.0, async_rounds=args.async_rounds,
-                            n_clusters=args.clusters, **kw)
+                            n_clusters=args.clusters,
+                            participation_rate=args.participation_rate,
+                            admission=args.admission, **kw)
         hcfg.validate()
         if args.clusters > 1 and args.pods % args.clusters:
             ap.error(f"--pods {args.pods} must split evenly into "

@@ -1,0 +1,211 @@
+"""Participation-rate admission on top of the Hermes gate (DESIGN.md §11).
+
+Level-B: ``admit_gates`` semantics (identity at prate=1.0, deterministic
+top-k by merge weight, Bernoulli thinning), round-family behavior at
+prate < 1 (deferred pods keep local params, all-deferred rounds are the
+closed identity, dispatch+commit stays bit-identical to the fused round),
+and the wire invariant (admission changes gate frequency, never shape).
+Level-A: the numpy twin ``admission_mask`` and the vectorized engine's
+prate plumbing are covered in test_vector_allocator / the engine tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import HermesConfig
+from repro.dist.hermes_sync import (
+    admit_gates, hermes_commit, hermes_dispatch, hermes_pod_state,
+    hermes_round,
+)
+
+
+def _cfg(prate, mode="topk", **kw):
+    return HermesConfig(alpha=10.0, beta=0.1, lam=3, window=4,
+                        participation_rate=prate, admission=mode, **kw)
+
+
+def _pods(key, n, shape=(6, 5)):
+    return {"w": jax.random.normal(key, (n,) + shape)}
+
+
+# ---------------------------------------------------------------------------
+# admit_gates unit semantics
+# ---------------------------------------------------------------------------
+
+def test_prate_one_is_the_same_object():
+    """prate >= 1.0 must trace ZERO ops — it returns the input gates
+    object itself, which is what makes every round family's lowering
+    bit-identical to the pre-admission code by construction."""
+    g = jnp.array([True, False, True, True])
+    losses = jnp.array([0.5, 1.0, 0.2, 0.9])
+    out = admit_gates(g, losses, _cfg(1.0))
+    assert out is g
+
+
+def test_topk_admits_largest_merge_weights():
+    g = jnp.array([True, True, False, True, True, True])
+    losses = jnp.array([0.9, 0.2, 0.05, 0.5, 0.3, 0.7], jnp.float32)
+    adm = np.asarray(admit_gates(g, losses, _cfg(0.5)))
+    # 5 open gates, k = floor(0.5 * 5) = 2: the two lowest-loss OPEN pods
+    assert adm.sum() == 2
+    assert adm[1] and adm[4]
+    assert not adm[2]          # closed pod, best loss — still never admitted
+
+
+def test_topk_floor_admits_at_least_one():
+    g = jnp.array([True, False, False, False])
+    losses = jnp.ones((4,), jnp.float32)
+    adm = np.asarray(admit_gates(g, losses, _cfg(0.01)))
+    assert adm.sum() == 1 and adm[0]
+
+
+def test_all_closed_stays_closed():
+    g = jnp.zeros((5,), bool)
+    adm = np.asarray(admit_gates(g, jnp.ones((5,)), _cfg(0.5)))
+    assert adm.sum() == 0
+
+
+def test_admitted_is_subset_of_open():
+    key = jax.random.PRNGKey(0)
+    for mode in ("topk", "prob"):
+        for r in range(5):
+            k = jax.random.fold_in(key, r)
+            g = jax.random.bernoulli(k, 0.6, (9,))
+            losses = jax.random.uniform(jax.random.fold_in(k, 1), (9,)) + .1
+            adm = np.asarray(admit_gates(g, losses, _cfg(0.4, mode), rng=k))
+            assert not np.any(adm & ~np.asarray(g))
+
+
+def test_prob_mode_requires_rng():
+    g = jnp.array([True, True])
+    with pytest.raises(ValueError):
+        admit_gates(g, jnp.ones((2,)), _cfg(0.5, "prob"))
+
+
+def test_topk_is_deterministic():
+    g = jnp.array([True] * 8)
+    losses = jnp.linspace(0.1, 0.8, 8).astype(jnp.float32)
+    a = np.asarray(admit_gates(g, losses, _cfg(0.5)))
+    b = np.asarray(admit_gates(g, losses, _cfg(0.5)))
+    np.testing.assert_array_equal(a, b)
+    assert a.sum() == 4 and a[:4].all()    # the 4 smallest losses
+
+
+# ---------------------------------------------------------------------------
+# round families under admission
+# ---------------------------------------------------------------------------
+
+def _warm(cfg, n, rounds=2, seed=7):
+    """Advance the vmapped GUP past its cnt>=2 warmup with varied losses
+    so every pod's next z-score is finite (alpha=10 then opens them all)."""
+    pods = _pods(jax.random.PRNGKey(seed), n)
+    gup = hermes_pod_state(cfg, n)
+    wg = {"w": jnp.zeros((6, 5))}
+    for r in range(rounds):
+        losses = jnp.linspace(1.0, 2.0, n).astype(jnp.float32) + 0.3 * r
+        out = hermes_round(pods, gup, losses, wg, jnp.float32(1.0), cfg)
+        gup, pods, wg = out["gup"], out["pod_params"], out["w_global"]
+    return pods, gup, wg
+
+
+def test_round_defers_without_refreshing():
+    n = 4
+    cfg = _cfg(0.5)
+    base = _cfg(1.0)
+    pods, gup, wg = _warm(cfg, n)
+    losses = jnp.array([0.4, 0.3, 0.2, 0.1], jnp.float32)
+    raw = hermes_round(pods, gup, losses, wg, jnp.float32(1.0), base)
+    out = hermes_round(pods, gup, losses, wg, jnp.float32(1.0), cfg)
+    assert np.asarray(raw["gates"]).sum() == n        # all gates open raw
+    adm = np.asarray(out["gates"])
+    assert adm.sum() == 2 and adm[2] and adm[3]       # 2 lowest losses ship
+    # deferred pods keep their local params bit-exactly (no refresh)
+    np.testing.assert_array_equal(np.asarray(out["pod_params"]["w"][0]),
+                                  np.asarray(pods["w"][0]))
+    np.testing.assert_array_equal(np.asarray(out["pod_params"]["w"][1]),
+                                  np.asarray(pods["w"][1]))
+    # admitted pods refresh to the merged global
+    np.testing.assert_array_equal(np.asarray(out["pod_params"]["w"][3]),
+                                  np.asarray(out["w_global"]["w"]))
+    # GUP bookkeeping advanced on the RAW gate: the deferred pods still
+    # count as pushes to their own alpha/n_iter state
+    for a, b in zip(jax.tree.leaves(out["gup"]), jax.tree.leaves(raw["gup"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_all_deferred_round_is_closed_identity():
+    """k is floored at 1 only when something is open; a round whose raw
+    gates are ALL closed stays the identity under admission too."""
+    n = 3
+    cfg = _cfg(0.5)
+    pods = _pods(jax.random.PRNGKey(1), n)
+    gup = hermes_pod_state(cfg, n)     # cold queues: every gate shut
+    wg = {"w": jnp.ones((6, 5))}
+    out = hermes_round(pods, gup, jnp.ones((n,)), wg, jnp.float32(1.0), cfg)
+    assert not bool(out["any_push"])
+    np.testing.assert_array_equal(np.asarray(out["w_global"]["w"]),
+                                  np.asarray(wg["w"]))
+
+
+@pytest.mark.parametrize("mode", ["none", "int8"])
+def test_dispatch_commit_bit_identical_under_admission(mode):
+    """The pipelined halves must stay bit-identical to the fused round at
+    prate < 1: the pending buffer carries the ADMITTED gates, so the
+    commit merges/refreshes exactly the pods whose payloads shipped."""
+    cfg = HermesConfig(alpha=10.0, beta=0.1, lam=3, window=4,
+                       compression=mode, error_feedback=mode == "int8",
+                       participation_rate=0.5)
+    n = 4
+    pods, gup, wg = _warm(cfg, n)
+    err = None
+    key = jax.random.PRNGKey(42)
+    for r in range(3):
+        losses = jnp.asarray([1.0 - 0.1 * r, 1.2, 0.9, 1.1 - 0.2 * r],
+                             jnp.float32)
+        rng = jax.random.fold_in(key, r)
+        sync = hermes_round(pods, gup, losses, wg, jnp.float32(1.0), cfg,
+                            error=err, rng=rng)
+        dp = hermes_dispatch(pods, gup, losses, wg, jnp.float32(1.0), cfg,
+                             error=err, rng=rng)
+        cm = hermes_commit(pods, dp["pending"], wg, cfg=cfg)
+        np.testing.assert_array_equal(np.asarray(dp["gates"]),
+                                      np.asarray(sync["gates"]))
+        for a, b in zip(jax.tree.leaves(cm["w_global"]),
+                        jax.tree.leaves(sync["w_global"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(cm["pod_params"]),
+                        jax.tree.leaves(sync["pod_params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        pods, wg, gup = (sync["pod_params"], sync["w_global"], dp["gup"])
+        err = sync.get("error")
+
+
+def test_prate_one_lowering_identical_to_default():
+    """Explicit participation_rate=1.0 lowers to the same HLO text as the
+    default config — the admission layer is statically absent."""
+    cfg_a = HermesConfig(alpha=-0.3, beta=0.1, lam=2, window=4)
+    cfg_b = HermesConfig(alpha=-0.3, beta=0.1, lam=2, window=4,
+                         participation_rate=1.0)
+    n = 2
+    pods = _pods(jax.random.PRNGKey(3), n)
+    wg = {"w": jnp.zeros((6, 5))}
+
+    def lower(cfg):
+        gup = hermes_pod_state(cfg, n)
+        f = jax.jit(lambda p, g, l, w: hermes_round(
+            p, g, l, w, jnp.float32(1.0), cfg))
+        return f.lower(pods, gup, jnp.ones((n,), jnp.float32),
+                       wg).as_text()
+
+    assert lower(cfg_a) == lower(cfg_b)
+
+
+def test_config_validates_admission_fields():
+    with pytest.raises(AssertionError):
+        HermesConfig(participation_rate=0.0).validate()
+    with pytest.raises(AssertionError):
+        HermesConfig(participation_rate=1.5).validate()
+    with pytest.raises(AssertionError):
+        HermesConfig(admission="lottery").validate()
+    HermesConfig(participation_rate=0.25, admission="prob").validate()

@@ -1,0 +1,218 @@
+"""Vectorized allocator cores for the 10k-worker sweep (DESIGN.md §11).
+
+Pins the array-native twins against the dict/scalar paths the Level-A
+loop has always used — ``detect_outliers_arr`` / ``kmeans_1d_arr`` /
+``allocate_batch`` / ``reallocate_arr`` / ``admission_mask`` — plus
+determinism regressions at large n (the sweep must produce the same
+labels and allocations run-to-run with no Python loop over workers).
+"""
+import numpy as np
+import pytest
+
+from repro.config import HermesConfig
+from repro.core.allocator import (
+    Allocation, admission_mask, allocate_batch, detect_outliers,
+    detect_outliers_arr, dual_binary_search, kmeans_1d, kmeans_1d_arr,
+    reallocate, reallocate_arr,
+)
+from repro.core.engine import _VecGup
+from repro.core.gup import gup_init, gup_update
+
+
+# ---------------------------------------------------------------------------
+# outlier detection
+# ---------------------------------------------------------------------------
+
+def test_detect_outliers_arr_matches_dict_path():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(2, 40))
+        vals = rng.lognormal(0.0, 0.7, n)
+        times = {f"w{i}": float(v) for i, v in enumerate(vals)}
+        want = set(detect_outliers(times))
+        mask = detect_outliers_arr(vals)
+        got = {f"w{i}" for i in np.flatnonzero(mask)}
+        assert got == want
+
+
+def test_detect_outliers_arr_large_n_deterministic():
+    rng = np.random.default_rng(1)
+    vals = rng.lognormal(0.0, 0.5, 10_000)
+    vals[::97] *= 8.0                       # plant stragglers
+    a = detect_outliers_arr(vals)
+    b = detect_outliers_arr(vals.copy())
+    np.testing.assert_array_equal(a, b)
+    assert a.any() and a.sum() < vals.size
+
+
+# ---------------------------------------------------------------------------
+# 1-D k-means
+# ---------------------------------------------------------------------------
+
+def test_kmeans_1d_arr_matches_dict_path():
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        n = int(rng.integers(4, 60))
+        c = int(rng.integers(1, 5))
+        vals = rng.lognormal(0.0, 0.6, n)
+        # index-style names make the dict path's (time, name) tie-break
+        # coincide with the array path's (value, index) tie-break
+        times = {f"{i:06d}": float(v) for i, v in enumerate(vals)}
+        want = kmeans_1d(times, c)
+        got = kmeans_1d_arr(vals, c)
+        assert [want[f"{i:06d}"] for i in range(n)] == list(got)
+
+
+def test_kmeans_1d_arr_large_n_deterministic_and_ordered():
+    rng = np.random.default_rng(3)
+    vals = rng.lognormal(0.0, 0.8, 10_000)
+    a = kmeans_1d_arr(vals, 8)
+    b = kmeans_1d_arr(vals.copy(), 8)
+    np.testing.assert_array_equal(a, b)
+    assert set(np.unique(a)) <= set(range(8))
+    # labels are ordered by centroid: a faster worker never lands in a
+    # strictly slower cluster
+    order = np.argsort(vals, kind="stable")
+    assert (np.diff(a[order]) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# batched dual binary search
+# ---------------------------------------------------------------------------
+
+def test_allocate_batch_never_worse_than_scalar():
+    """The batch path probes every mini-batch choice, so its landed
+    |t - target| can only match or beat the scalar heuristic walk."""
+    rng = np.random.default_rng(4)
+    cfg = HermesConfig()
+    k = rng.uniform(0.005, 0.08, 64)
+    target = 2.0
+    dss, mbs = allocate_batch(k, target, dss_domain=(32, 8192),
+                              mbs_choices=cfg.mbs_choices)
+    for i in range(k.size):
+        a = dual_binary_search(float(k[i]), target, dss_domain=(32, 8192),
+                               mbs_choices=cfg.mbs_choices)
+        err_scalar = abs(k[i] * max(1, a.dss // a.mbs) - target)
+        err_batch = abs(k[i] * max(1, dss[i] // mbs[i]) - target)
+        assert err_batch <= err_scalar + 1e-9, (i, err_batch, err_scalar)
+        assert int(mbs[i]) in cfg.mbs_choices
+        assert dss[i] >= mbs[i]
+
+
+def test_allocate_batch_respects_mem_limits():
+    cfg = HermesConfig()
+    k = np.full((16,), 0.01)
+    lim = np.full((16,), 300, np.int64)
+    dss, _ = allocate_batch(k, 50.0, dss_domain=(32, 60000),
+                            mbs_choices=cfg.mbs_choices, mem_limit_arr=lim)
+    assert (dss <= 300).all()
+
+
+def test_allocate_batch_deterministic_large_n():
+    cfg = HermesConfig()
+    rng = np.random.default_rng(5)
+    k = rng.uniform(0.002, 0.1, 10_000)
+    d1, m1 = allocate_batch(k, 1.5, mbs_choices=cfg.mbs_choices)
+    d2, m2 = allocate_batch(k.copy(), 1.5, mbs_choices=cfg.mbs_choices)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(m1, m2)
+
+
+def test_reallocate_arr_targets_same_outliers_as_dict_path():
+    rng = np.random.default_rng(6)
+    cfg = HermesConfig()
+    n = 48
+    vals = rng.lognormal(0.0, 0.3, n)
+    vals[:4] *= 6.0                          # stragglers
+    times = {f"w{i:03d}": float(v) for i, v in enumerate(vals)}
+    allocs = {k: Allocation(256, 16) for k in times}
+    new = reallocate(times, allocs, cfg, dss_domain=(32, 4096))
+    dss = np.full((n,), 256, np.int64)
+    mbs = np.full((n,), 16, np.int64)
+    mask, nd, nm = reallocate_arr(vals, dss, mbs, cfg,
+                                  dss_domain=(32, 4096))
+    assert {f"w{i:03d}" for i in np.flatnonzero(mask)} == set(new)
+    # same objective: every resized worker lands within one step of the
+    # dict path's landing error (the batch path probes all mbs choices)
+    for i in np.flatnonzero(mask):
+        a = new[f"w{i:03d}"]
+        k_i = vals[i] / max(1, 256 // 16)
+        err_dict = abs(k_i * max(1, a.dss // a.mbs) - np.median(vals))
+        err_arr = abs(k_i * max(1, nd[i] // nm[i]) - np.median(vals))
+        assert err_arr <= err_dict + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# admission_mask (numpy twin of dist.hermes_sync.admit_gates)
+# ---------------------------------------------------------------------------
+
+def test_admission_mask_identity_at_full_rate():
+    open_m = np.array([True, False, True])
+    out = admission_mask(open_m, np.ones(3), 1.0)
+    np.testing.assert_array_equal(out, open_m)
+
+
+def test_admission_mask_topk_counts_and_subset():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = int(rng.integers(1, 200))
+        open_m = rng.random(n) < 0.6
+        w = rng.random(n)
+        prate = float(rng.uniform(0.05, 0.95))
+        adm = admission_mask(open_m, w, prate)
+        n_open = int(open_m.sum())
+        if n_open == 0:
+            assert adm.sum() == 0
+        else:
+            assert adm.sum() == max(1, int(np.floor(prate * n_open)))
+        assert not np.any(adm & ~open_m)
+
+
+def test_admission_mask_topk_keeps_heaviest():
+    open_m = np.array([True] * 6)
+    w = np.array([0.1, 0.9, 0.3, 0.8, 0.2, 0.7])
+    adm = admission_mask(open_m, w, 0.5)
+    assert list(np.flatnonzero(adm)) == [1, 3, 5]
+
+
+def test_admission_mask_prob_needs_rng_and_subsets():
+    open_m = np.array([True] * 100)
+    with pytest.raises(ValueError):
+        admission_mask(open_m, np.ones(100), 0.5, mode="prob")
+    rng = np.random.default_rng(8)
+    adm = admission_mask(open_m, np.ones(100), 0.5, mode="prob", rng=rng)
+    assert not np.any(adm & ~open_m)
+    assert 20 <= adm.sum() <= 80          # Bernoulli(0.5), loose bounds
+
+
+# ---------------------------------------------------------------------------
+# vectorized GUP gate (batch engine) vs the scalar host gate
+# ---------------------------------------------------------------------------
+
+def test_vecgup_matches_scalar_gup_trajectories():
+    cfg = HermesConfig(alpha=0.1, beta=0.2, lam=3, window=5)
+    n, rounds = 16, 40
+    rng = np.random.default_rng(9)
+    losses = rng.uniform(0.2, 2.0, (rounds, n))
+    vec = _VecGup(n, cfg)
+    scal = [gup_init(cfg) for _ in range(n)]
+    active = np.ones((n,), bool)
+    for r in range(rounds):
+        pv = vec.update(losses[r], active)
+        for i in range(n):
+            ps, _ = gup_update(scal[i], float(losses[r, i]))
+            assert bool(pv[i]) == ps, (r, i)
+            assert vec.alpha[i] == pytest.approx(scal[i].alpha)
+    for i in range(n):
+        assert int(vec.pushes[i]) == scal[i].pushes
+
+
+def test_vecgup_inactive_rows_freeze():
+    cfg = HermesConfig(alpha=0.1, beta=0.2, lam=2, window=4)
+    vec = _VecGup(2, cfg)
+    active = np.array([True, False])
+    for r in range(6):
+        push = vec.update(np.array([1.0 + 0.1 * (-1.0) ** r, 0.5]), active)
+        assert not push[1]
+    assert vec.cnt[1] == 0 and vec.pushes[1] == 0
+    assert vec.alpha[1] == pytest.approx(cfg.alpha)
